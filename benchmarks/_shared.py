@@ -1,0 +1,88 @@
+"""Shared fixtures for the accuracy benchmarks.
+
+Pretrained Llama/OPT checkpoints are unavailable offline, so the accuracy
+experiments (Fig. 4/5/8/10, Tables I/II analogues) run on a small
+byte-level LM trained in-repo on the offline corpus.  What transfers from
+the paper is the *ordering and shape* of the quantization-accuracy
+trade-offs, which is what these benchmarks assert.
+
+The model is trained once and cached under experiments/bench_model/.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.launch.steps import cross_entropy
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.init import init_params
+from repro.train.trainer import Trainer, TrainerConfig
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "bench_model")
+
+BENCH_CFG = ModelConfig(
+    name="bench-lm", family="dense", n_layers=3, d_model=96, n_heads=4,
+    n_kv_heads=2, head_dim=32, d_ff=256, vocab_size=259,
+    tie_embeddings=True, param_dtype="float32")
+
+SEQ = 256
+TRAIN_STEPS = 150
+
+
+def get_model(force: bool = False):
+    """(params, cfg) — trained once, cached."""
+    mgr = CheckpointManager(BENCH_DIR, keep=1)
+    params = init_params(BENCH_CFG, jax.random.PRNGKey(0))
+    if not force:
+        restored = mgr.restore_latest({"params": params})
+        if restored is not None:
+            return restored[0]["params"], BENCH_CFG
+    t0 = time.time()
+    tcfg = TrainerConfig(total_steps=TRAIN_STEPS, batch_size=8,
+                         seq_len=SEQ, checkpoint_dir=BENCH_DIR + "_ckpt",
+                         checkpoint_every=TRAIN_STEPS, log_every=50)
+    res = Trainer(BENCH_CFG, tcfg, log_fn=lambda s: None).run()
+    params = res["state"]["params"]
+    mgr.save(TRAIN_STEPS, {"params": params})
+    print(f"# trained bench model in {time.time()-t0:.0f}s, "
+          f"loss {res['losses'][0]:.2f} -> {res['losses'][-1]:.2f}")
+    return params, BENCH_CFG
+
+
+def eval_batches(n_batches: int = 4, batch: int = 8, seq: int = SEQ):
+    pipe = TokenPipeline(PipelineConfig(batch_size=batch, seq_len=seq,
+                                        seed=777))
+    return [pipe.batch_at(10_000 + i) for i in range(n_batches)]
+
+
+def ppl(params, cfg, quant=None, eval_kv: bool = True,
+        batches=None) -> float:
+    """Teacher-forced perplexity under a quant recipe."""
+    batches = batches or eval_batches()
+
+    @jax.jit
+    def ce(p, t, l):
+        logits = lm.forward(p, cfg, t, quant=quant, eval_kv=eval_kv)
+        return cross_entropy(logits, l, z_loss=0.0)
+
+    tot = 0.0
+    for toks, lbls in batches:
+        tot += float(ce(params, jnp.asarray(toks), jnp.asarray(lbls)))
+    return float(np.exp(tot / len(batches)))
+
+
+def relative_accuracy(ppl_full: float, ppl_q: float) -> float:
+    """Paper's relative-accuracy metric: full-precision PPL = 100%."""
+    return 100.0 * ppl_full / ppl_q
+
+
+def csv(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,44 @@
+"""Fig. 15 analogue: tiling-aware dataflow EMA crossover.
+
+EMA(col-major)  = K/k * (M*N) + N*K   (weights resident)
+EMA(row-major)  = M/m * (N*K) + M*N   (activations resident)
+
+As the token count M grows, the optimal dataflow flips; the FDGF
+controller (``choose_dataflow`` — also used by the Pallas GEMM wrapper)
+must track the analytic optimum."""
+from __future__ import annotations
+
+import time
+
+from repro.kernels.bfp_matmul import choose_dataflow
+
+from benchmarks._shared import csv
+
+
+def ema(M, N, K, bm=128, bn=128):
+    ws = N * K + (N // bn) * M * K    # weight-stationary
+    acts = M * K + (M // bm) * K * N  # activation-stationary
+    return ws, acts
+
+
+def main(fast: bool = False) -> dict:
+    N = K = 4096
+    out = {}
+    t0 = time.time()
+    flip = None
+    for M in (128, 256, 512, 1024, 2048, 4096, 8192, 16384):
+        ws, acts = ema(M, N, K)
+        best = "weight_stationary" if ws <= acts else "act_stationary"
+        chosen = choose_dataflow(M, N, K)
+        out[M] = (ws, acts, chosen)
+        if flip is None and best == "weight_stationary":
+            flip = M
+        csv(f"fig15.M{M}", (time.time() - t0) * 1e6,
+            f"ema_ws={ws};ema_act={acts};chosen={chosen}")
+        assert chosen == best, f"FDGF chose {chosen}, optimum {best}"
+    csv("fig15.crossover", 0.0, f"first_weight_stationary_M={flip}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

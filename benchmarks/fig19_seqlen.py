@@ -1,0 +1,42 @@
+"""Fig. 19 analogue: Harmonia's advantage grows with sequence length.
+
+Paper: Llama-3.2-3B, 2K-16K tokens — 2.50-4.14x speedup, 1.54-3.35x
+energy reduction vs baselines; gains widen as attention dominates."""
+from __future__ import annotations
+
+import time
+
+from repro.perfmodel.accelerator import (PAPER_MODELS, llm_prefill_gemms,
+                                         run_workload)
+
+from benchmarks._shared import csv
+
+SEQS = (2048, 4096, 8192, 16384)
+
+
+def main(fast: bool = False) -> dict:
+    mcfg = PAPER_MODELS["llama3.2-3b"]
+    out = {}
+    t0 = time.time()
+    prev = None
+    for s in (SEQS[:2] if fast else SEQS):
+        gemms = llm_prefill_gemms(seq=s, **mcfg)
+        fp = run_workload(gemms, "fp16-fp16")
+        hm = run_workload(gemms, "harmonia")
+        anda = run_workload(gemms, "anda-m8")
+        sp_fp = fp["seconds"] / hm["seconds"]
+        sp_anda = anda["seconds"] / hm["seconds"]
+        en = fp["joules"] / hm["joules"]
+        out[s] = (sp_fp, en)
+        csv(f"fig19.seq{s}", (time.time() - t0) * 1e6,
+            f"speedup_vs_fp16={sp_fp:.2f}x;vs_anda={sp_anda:.2f}x;"
+            f"energy_red={en:.2f}x")
+        prev = sp_anda if prev is None else prev
+    if not fast:
+        assert out[16384][0] >= out[2048][0] * 0.95, \
+            "advantage must not shrink with sequence length"
+    return out
+
+
+if __name__ == "__main__":
+    main()

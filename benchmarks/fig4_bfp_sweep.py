@@ -1,0 +1,52 @@
+"""Fig. 4 analogue: relative accuracy vs mantissa bits x group size.
+
+Paper claims: accuracy falls sharply below 8-bit mantissas; group 32 at
+m8 keeps degradation ~<1.5%; larger groups amplify truncation loss.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.quant_config import QuantConfig, KvQuantConfig
+
+from benchmarks._shared import csv, eval_batches, get_model, ppl, \
+    relative_accuracy
+
+MANTISSAS = (4, 6, 8, 10)
+GROUPS = (16, 32, 64)
+
+
+def recipe(m: int, g: int) -> QuantConfig:
+    # all-layer BFP at (m, g); KV follows the same flat precision
+    return QuantConfig(group_size=g, act_mantissa_bits=m,
+                       score_mantissa_bits=m,
+                       kv=KvQuantConfig(mantissa_bits=m,
+                                        high_mantissa_bits=m,
+                                        asymmetric=False, group_size=g))
+
+
+def main(fast: bool = False) -> dict:
+    params, cfg = get_model()
+    batches = eval_batches(2 if fast else 4)
+    base = ppl(params, cfg, None, batches=batches)
+    t0 = time.time()
+    grid = {}
+    mans = MANTISSAS[1:3] if fast else MANTISSAS
+    grps = GROUPS[1:2] if fast else GROUPS
+    for g in grps:
+        for m in mans:
+            p = ppl(params, cfg, recipe(m, g), batches=batches)
+            rel = relative_accuracy(base, p)
+            grid[(m, g)] = rel
+            csv(f"fig4.m{m}.g{g}", (time.time() - t0) * 1e6,
+                f"rel_acc={rel:.2f}%")
+    # assertions of the paper's shape
+    if not fast:
+        assert grid[(8, 32)] > grid[(4, 32)], "m8 should beat m4"
+        assert grid[(8, 32)] >= grid[(8, 64)] - 1.0, \
+            "smaller groups should not be much worse"
+    return grid
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Fig. 5 analogue: relative accuracy vs KV-cache mantissa width.
+
+Paper: group 32, other activations at m8; KV mantissa swept down; accuracy
+deteriorates progressively and drops sharply below 5 bits (no
+asymmetric allocation / smoothing here — that is Fig. 8's fix)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.quant_config import QuantConfig, KvQuantConfig, \
+    SmoothingConfig
+
+from benchmarks._shared import csv, eval_batches, get_model, ppl, \
+    relative_accuracy
+
+KV_BITS = (8, 6, 5, 4, 3, 2)
+
+
+def recipe(kv_m: int) -> QuantConfig:
+    return QuantConfig(
+        kv=KvQuantConfig(mantissa_bits=kv_m, high_mantissa_bits=kv_m,
+                         asymmetric=False),
+        smoothing=SmoothingConfig(offline=False, online=False))
+
+
+def main(fast: bool = False) -> dict:
+    params, cfg = get_model()
+    batches = eval_batches(2 if fast else 4)
+    base = ppl(params, cfg, None, batches=batches)
+    out = {}
+    t0 = time.time()
+    for m in (KV_BITS[::2] if fast else KV_BITS):
+        p = ppl(params, cfg, recipe(m), batches=batches)
+        rel = relative_accuracy(base, p)
+        out[m] = rel
+        csv(f"fig5.kv_m{m}", (time.time() - t0) * 1e6,
+            f"rel_acc={rel:.2f}%")
+    if not fast:
+        assert out[8] > out[2], "accuracy must degrade with KV mantissa"
+        assert out[4] < out[8], "4-bit KV (naive) must lose accuracy"
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Fig. 8 analogue: asymmetric bit allocation recovers 4-bit-KV accuracy.
+
+Paper: +9.54% average relative accuracy across three models from giving
+the initial 32 + local 64 tokens 8-bit mantissas (97.6% of a 4K cache
+stays at 4 bits; 3.05x storage reduction)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.quant_config import (KvQuantConfig, QuantConfig,
+                                     SmoothingConfig)
+
+from benchmarks._shared import csv, eval_batches, get_model, ppl, \
+    relative_accuracy
+
+
+def main(fast: bool = False) -> dict:
+    params, cfg = get_model()
+    batches = eval_batches(2 if fast else 4)
+    base = ppl(params, cfg, None, batches=batches)
+    no_smooth = SmoothingConfig(offline=False, online=False)
+
+    naive = QuantConfig(kv=KvQuantConfig(mantissa_bits=4,
+                                         asymmetric=False),
+                        smoothing=no_smooth)
+    asym = QuantConfig(kv=KvQuantConfig(mantissa_bits=4, asymmetric=True),
+                       smoothing=no_smooth)
+    t0 = time.time()
+    r_naive = relative_accuracy(base, ppl(params, cfg, naive,
+                                          batches=batches))
+    r_asym = relative_accuracy(base, ppl(params, cfg, asym,
+                                         batches=batches))
+    gain = r_asym - r_naive
+    csv("fig8.kv4_naive", (time.time() - t0) * 1e6,
+        f"rel_acc={r_naive:.2f}%")
+    csv("fig8.kv4_asymmetric", (time.time() - t0) * 1e6,
+        f"rel_acc={r_asym:.2f}%;gain={gain:+.2f}pp")
+    store = asym.kv.storage_fraction(4096)
+    csv("fig8.storage_4k", 0.0,
+        f"fraction={store:.4f};paper=0.328(3.05x)")
+    assert r_asym >= r_naive - 0.5, \
+        "asymmetric allocation should not hurt"
+    return {"naive": r_naive, "asym": r_asym, "gain": gain}
+
+
+if __name__ == "__main__":
+    main()

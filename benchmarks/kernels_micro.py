@@ -1,0 +1,75 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle correctness +
+wall time of the jitted XLA-equivalent path (CPU numbers are relative;
+the TPU numbers come from the roofline model)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bfp
+from repro.kernels import ops, ref
+from repro.quant.int4 import quantize_weight
+
+from benchmarks._shared import csv
+
+
+def timeit(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6
+
+
+def main(fast: bool = False) -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+    shapes = [(256, 512, 256)] if fast else [(256, 512, 256),
+                                             (512, 1024, 512)]
+    for (M, K, N) in shapes:
+        a = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32)) * .05
+        am, ae = ref.ref_bfp_quantize(a)
+        qw = quantize_weight(w, 128)
+        oracle = ref.ref_bfp_matmul(am, ae, qw.packed, qw.scale)
+        kern = ops.bfp_matmul(am, ae, qw.packed, qw.scale, interpret=True)
+        err = float(jnp.abs(kern - oracle).max())
+        rel = err / float(jnp.abs(oracle).max())
+        us = timeit(jax.jit(lambda am, ae: ref.ref_bfp_matmul(
+            am, ae, qw.packed, qw.scale)), am, ae)
+        csv(f"kernels.bfp_matmul.{M}x{K}x{N}", us,
+            f"pallas_vs_ref_relerr={rel:.2e}")
+        assert rel < 1e-5
+        out[(M, K, N)] = rel
+
+    # attention kernel
+    S, hd = (128, 64) if fast else (256, 64)
+    q = jnp.asarray(rng.normal(size=(S, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(S, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, hd)).astype(np.float32))
+    km, ke = ref.ref_bfp_quantize(k)
+    vm, ve = ops.quantize_v_token_grouped(v)
+    from repro.kernels.bfp_attention import bfp_attention_prefill_kernel
+    o_k = bfp_attention_prefill_kernel(q, km, ke, vm, ve, block_q=64,
+                                       block_s=64, interpret=True)
+    o_r = ref.ref_bfp_attention_prefill(q, km, ke, vm, ve)
+    err = float(jnp.abs(o_k - o_r).max())
+    csv(f"kernels.bfp_attention.S{S}", 0.0, f"pallas_vs_ref_err={err:.2e}")
+    assert err < 1e-4
+
+    # quantizer kernel
+    x = jnp.asarray(rng.normal(size=(128, 256)).astype(np.float32))
+    mk, ek = ops.bfp_quantize(x, interpret=True)
+    mr, er = ref.ref_bfp_quantize(x)
+    exact = bool(jnp.all(mk == mr) and jnp.all(ek == er))
+    csv("kernels.bfp_quantize.128x256", 0.0, f"bit_exact={exact}")
+    assert exact
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  ``--fast`` trims sweeps
+(CI); default runs the full grids.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig4,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig4", "benchmarks.fig4_bfp_sweep"),
+    ("fig5", "benchmarks.fig5_kv_sweep"),
+    ("fig8", "benchmarks.fig8_asym_ablation"),
+    ("fig10", "benchmarks.fig10_smoothing"),
+    ("table1", "benchmarks.table1_ppl"),
+    ("table2", "benchmarks.table2_longtask"),
+    ("fig15", "benchmarks.fig15_dataflow"),
+    ("fig1618", "benchmarks.fig1618_accelerators"),
+    ("fig19", "benchmarks.fig19_seqlen"),
+    ("kernels", "benchmarks.kernels_micro"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark keys")
+    args = ap.parse_args()
+
+    only = set(args.only.split(",")) if args.only else None
+    failures = []
+    print("name,us_per_call,derived")
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            mod.main(fast=args.fast)
+            print(f"{key}.TOTAL,{(time.time()-t0)*1e6:.0f},ok")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((key, repr(e)))
+            print(f"{key}.TOTAL,{(time.time()-t0)*1e6:.0f},FAILED:{e!r}")
+    if failures:
+        print(f"# {len(failures)} benchmark(s) failed: "
+              f"{[k for k, _ in failures]}", file=sys.stderr)
+        sys.exit(1)
+    print("# all benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

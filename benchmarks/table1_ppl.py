@@ -1,0 +1,45 @@
+"""Table I analogue: PPL under each method's precision recipe.
+
+Expected ordering (paper): Full <= {Omniquant, FIGNA, Anda-m8, Harmonia-
+kv8} < Anda-m6 < Harmonia-kv4 << Anda-m4; Harmonia uniquely adds KV
+reduction (43.75% at kv8 / 68.75% at kv4)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.bfp import kv_cache_reduction
+from repro.core.quant_config import RECIPES
+from repro.quant.int4 import fake_quant_params
+
+from benchmarks._shared import csv, eval_batches, get_model, ppl
+
+ROWS = ["full", "weight_only_int4", "figna", "anda_m4", "anda_m6",
+        "anda_m8", "harmonia_kv8", "harmonia_kv4"]
+
+
+def main(fast: bool = False) -> dict:
+    params, cfg = get_model()
+    params_w4 = fake_quant_params(params)   # all non-full rows use INT4 W
+    batches = eval_batches(2 if fast else 4)
+    out = {}
+    rows = ROWS if not fast else ["full", "anda_m8", "harmonia_kv4"]
+    t0 = time.time()
+    for name in rows:
+        q = RECIPES[name]()
+        p = params if name == "full" else params_w4
+        quant = None if name == "full" else q
+        val = ppl(p, cfg, quant, batches=batches)
+        kv_red = {"harmonia_kv8": kv_cache_reduction(8),
+                  "harmonia_kv4": kv_cache_reduction(4)}.get(name, 0.0)
+        out[name] = val
+        csv(f"table1.{name}", (time.time() - t0) * 1e6,
+            f"ppl={val:.3f};kv_reduction={kv_red*100:.2f}%")
+    if not fast:
+        assert out["full"] <= out["anda_m4"], "m4 must be worst"
+        assert out["harmonia_kv4"] <= out["anda_m4"], \
+            "harmonia kv4 should beat flat 4-bit activations"
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Reproduce the paper's accuracy figures on the in-repo model:
+Fig. 4 (mantissa x group), Fig. 5 (KV mantissa), Fig. 8 (asymmetric
+allocation) in one run.
+
+  PYTHONPATH=src python examples/accuracy_sweep.py [--fast]
+"""
+import argparse
+import sys
+sys.path.insert(0, ".")
+
+from benchmarks import fig4_bfp_sweep, fig5_kv_sweep, fig8_asym_ablation
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    print("== Fig. 4: mantissa x group sweep ==")
+    grid = fig4_bfp_sweep.main(fast=args.fast)
+    print("== Fig. 5: KV mantissa sweep ==")
+    kv = fig5_kv_sweep.main(fast=args.fast)
+    print("== Fig. 8: asymmetric allocation ==")
+    asym = fig8_asym_ablation.main(fast=args.fast)
+
+    print("\nSummary (relative accuracy, full precision = 100%):")
+    for (m, g), rel in sorted(grid.items()):
+        print(f"  m{m} g{g}: {rel:6.2f}%")
+    for m, rel in sorted(kv.items(), reverse=True):
+        print(f"  kv m{m}: {rel:6.2f}%")
+    print(f"  kv4 naive {asym['naive']:.2f}% -> asymmetric "
+          f"{asym['asym']:.2f}% ({asym['gain']:+.2f}pp)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Recompute train-cell state_bytes_per_device under ZeRO-1 opt sharding.
+
+The final sweep's train cells were compiled before iteration 4 landed;
+state bytes are pure sharding metadata (no compile needed), so this
+script recomputes them with the current `opt_pspecs` and patches the
+JSONs in place, recording both values.  Cost/collective numbers keep the
+pre-ZeRO measurement except qwen train, which was re-measured directly
+(EXPERIMENTS.md §Perf iteration 4).
+"""
+from repro.launch import dryrun  # noqa: F401  (sets XLA_FLAGS first)
+import glob
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.distributed.sharding import opt_pspecs, param_pspecs
+from repro.launch.dryrun import _tree_bytes_per_device
+from repro.launch.mesh import make_production_mesh
+from repro.models.init import abstract_params
+
+for path in sorted(glob.glob("experiments/dryrun_final/*train_4k*.json")):
+    with open(path) as f:
+        rec = json.load(f)
+    if "error" in rec or "skipped" in rec:
+        continue
+    mesh = make_production_mesh(multi_pod=rec["multi_pod"])
+    cfg = get_arch(rec["arch"]).config
+    ap = abstract_params(cfg)
+    p_ps = param_pspecs(cfg, ap, mesh)
+    amom = jax.eval_shape(
+        lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                               p), ap)
+    o_ps = opt_pspecs(p_ps, amom, mesh)
+    params_b = _tree_bytes_per_device(ap, p_ps, mesh)
+    mom_b = (_tree_bytes_per_device(amom, o_ps.mu, mesh)
+             + _tree_bytes_per_device(amom, o_ps.nu, mesh))
+    new_state = params_b + mom_b
+    rec["state_bytes_per_device_prezero"] = rec.get(
+        "state_bytes_per_device")
+    rec["state_bytes_per_device"] = new_state
+    rec["zero1_opt_sharding"] = True
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+    old = rec["state_bytes_per_device_prezero"] or 0
+    print(f"{rec['arch']:28s} {'mp' if rec['multi_pod'] else 'sp'} "
+          f"state {old/2**30:6.2f} -> {new_state/2**30:6.2f} GiB")

@@ -1,0 +1,132 @@
+"""Fault-tolerant checkpoint manager (npz-sharded, atomic, resharding).
+
+Properties required for thousand-node operation, implemented here at
+single-host scale with the same contracts:
+
+  * **atomic**: writes go to ``step_XXXX.tmp`` then os.rename — a crash
+    mid-write never corrupts the latest checkpoint;
+  * **keep-k** retention with a ``latest`` pointer file;
+  * **resume** returns (state, step) or None — the trainer auto-resumes;
+  * **elastic resharding**: checkpoints store *logical* (unsharded)
+    arrays; reloading under any mesh re-applies that mesh's sharding, so
+    scaling from N to M hosts is a restore, not a migration;
+  * multi-host: each host would write its own shard file keyed by
+    process index and read back with ``jax.make_array_from_single_device_
+    arrays`` — the file format (one npz per shard + a JSON manifest)
+    already carries the shard key.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 process_index: int = 0):
+        self.dir = directory
+        self.keep = keep
+        self.rank = process_index
+        os.makedirs(directory, exist_ok=True)
+
+    # -- paths --
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def _latest_file(self) -> str:
+        return os.path.join(self.dir, "latest")
+
+    # -- save --
+    def save(self, step: int, state: Any, extra: Optional[dict] = None):
+        tmp = self._step_dir(step) + ".tmp"
+        final = self._step_dir(step)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        names, leaves, _ = _flatten_with_names(state)
+        arrays = {f"a{i}": np.asarray(jax.device_get(x))
+                  for i, x in enumerate(leaves)}
+        np.savez(os.path.join(tmp, f"shard_{self.rank:05d}.npz"), **arrays)
+        manifest = {"step": step, "names": names,
+                    "extra": extra or {}, "n_leaves": len(leaves)}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        os.rename(tmp, final)              # atomic commit
+        with open(self._latest_file() + ".tmp", "w") as f:
+            f.write(str(step))
+        os.rename(self._latest_file() + ".tmp", self._latest_file())
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- load --
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        try:
+            with open(self._latest_file()) as f:
+                s = int(f.read().strip())
+            if os.path.isdir(self._step_dir(s)):
+                return s
+        except (OSError, ValueError):
+            pass
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any,
+                shardings: Any = None) -> Tuple[Any, dict]:
+        """Restore into the structure of ``like``; optionally placing
+        leaves with ``shardings`` (a matching tree of NamedSharding) —
+        this is the elastic-rescale path."""
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, f"shard_{self.rank:05d}.npz"))
+        leaves = [data[f"a{i}"] for i in range(manifest["n_leaves"])]
+        _, like_leaves, treedef = _flatten_with_names(like)
+        if len(leaves) != len(like_leaves):
+            raise ValueError(
+                f"checkpoint has {len(leaves)} leaves, target expects "
+                f"{len(like_leaves)} — structure changed?")
+        cast = [np.asarray(a, dtype=l.dtype) for a, l in
+                zip(leaves, like_leaves)]
+        state = jax.tree_util.tree_unflatten(treedef, cast)
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), state, shardings)
+        return state, manifest["extra"]
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        s = self.latest_step()
+        if s is None:
+            return None
+        state, extra = self.restore(s, like, shardings)
+        return state, s, extra
+
+
+__all__ = ["CheckpointManager"]

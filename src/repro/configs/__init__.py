@@ -1,0 +1,17 @@
+"""Architecture registry: import side-effects register every ArchSpec."""
+from repro.configs import (gemma2_2b, starcoder2_15b, qwen25_32b,  # noqa
+                           deepseek_7b, whisper_large_v3,
+                           llama4_scout_17b, phi35_moe_42b, mamba2_370m,
+                           recurrentgemma_9b, internvl2_76b,
+                           harmonia_llama31_8b)
+from repro.configs.common import (ArchSpec, ShapeSpec, SHAPES, get_arch,
+                                  list_archs, input_specs, smoke_view)
+
+ASSIGNED_ARCHS = [
+    "gemma2-2b", "starcoder2-15b", "qwen2.5-32b", "deepseek-7b",
+    "whisper-large-v3", "llama4-scout-17b-a16e", "phi3.5-moe-42b-a6.6b",
+    "mamba2-370m", "recurrentgemma-9b", "internvl2-76b",
+]
+
+__all__ = ["ArchSpec", "ShapeSpec", "SHAPES", "get_arch", "list_archs",
+           "input_specs", "smoke_view", "ASSIGNED_ARCHS"]

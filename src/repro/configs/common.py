@@ -1,0 +1,147 @@
+"""Shared machinery for architecture configs: shapes, ArchSpec, input specs.
+
+Every assigned architecture ships:
+  * ``CONFIG`` — the exact published configuration,
+  * ``SMOKE``  — a reduced same-family config for CPU smoke tests,
+  * registration into the global registry (``repro.configs.get_arch``).
+
+``input_specs`` builds allocation-free ShapeDtypeStruct stand-ins for every
+model input of a given (arch x shape) cell — the dry-run lowers against
+these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    config: ModelConfig
+    smoke: ModelConfig
+    source: str = ""
+    notes: str = ""
+
+    def applicable_shapes(self) -> Dict[str, ShapeSpec]:
+        """Shape cells this arch actually runs; long_500k needs
+        sub-quadratic attention (skip recorded in EXPERIMENTS.md)."""
+        out = {}
+        for name, s in SHAPES.items():
+            if name == "long_500k" and not self.config.sub_quadratic:
+                continue
+            out[name] = s
+        return out
+
+    def skipped_shapes(self) -> Dict[str, str]:
+        if self.config.sub_quadratic:
+            return {}
+        return {"long_500k": "full-attention arch: O(S^2) prefill / O(S) "
+                             "KV state at 500k is out of scope per task "
+                             "spec (run for SSM/hybrid only)"}
+
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    # import side-effect registration
+    import repro.configs  # noqa: F401
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]
+
+
+def list_archs():
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: ArchSpec, shape: ShapeSpec,
+                packed_weights: Optional[bool] = None) -> Dict:
+    """Returns {name: ShapeDtypeStruct} for the step function of ``shape``.
+
+    train  -> {tokens, labels [, frontend_embeds]}
+    prefill-> {tokens [, frontend_embeds]}
+    decode -> {token, caches}
+    """
+    cfg = arch.config
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.param_dtype)
+
+    if shape.kind == "train":
+        specs = {"tokens": _sds((B, S), jnp.int32),
+                 "labels": _sds((B, S), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            specs["frontend_embeds"] = _sds(
+                (B, cfg.encoder_tokens, cfg.d_model), dt)
+        elif cfg.frontend == "vision_stub":
+            nf = cfg.n_frontend_tokens
+            specs["tokens"] = _sds((B, S - nf), jnp.int32)
+            specs["labels"] = _sds((B, S - nf), jnp.int32)
+            specs["frontend_embeds"] = _sds((B, nf, cfg.d_model), dt)
+        return specs
+
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            specs["frontend_embeds"] = _sds(
+                (B, cfg.encoder_tokens, cfg.d_model), dt)
+        elif cfg.frontend == "vision_stub":
+            nf = cfg.n_frontend_tokens
+            specs["tokens"] = _sds((B, S - nf), jnp.int32)
+            specs["frontend_embeds"] = _sds((B, nf, cfg.d_model), dt)
+        return specs
+
+    if shape.kind == "decode":
+        from repro.models import lm
+        enc_tokens = cfg.encoder_tokens if cfg.is_encoder_decoder else 0
+        caches = jax.eval_shape(
+            partial(lm.init_decode_caches, cfg, B, S, enc_tokens))
+        return {"token": _sds((B,), jnp.int32), "caches": caches}
+
+    raise ValueError(shape.kind)
+
+
+def smoke_view(spec: ArchSpec) -> ArchSpec:
+    """ArchSpec whose config is the smoke config (tiny tests)."""
+    return dataclasses.replace(spec, config=spec.smoke)
+
+
+__all__ = ["ShapeSpec", "SHAPES", "ArchSpec", "register", "get_arch",
+           "list_archs", "input_specs", "smoke_view"]

@@ -1,0 +1,22 @@
+"""deepseek-7b [dense]: 30L d_model=4096 32H (MHA kv=32) d_ff=11008
+vocab=102400.  Llama-architecture. [arXiv:2401.02954; hf]
+"""
+from repro.configs.common import ArchSpec, register
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-7b", family="dense",
+    n_layers=30, d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+    d_ff=11008, vocab_size=102400,
+    rope_theta=10000.0, tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-smoke", family="dense",
+    n_layers=3, d_model=96, n_heads=3, n_kv_heads=3, head_dim=32,
+    d_ff=192, vocab_size=512, tie_embeddings=False, param_dtype="float32",
+)
+
+SPEC = register(ArchSpec(
+    arch_id="deepseek-7b", config=CONFIG, smoke=SMOKE,
+    source="arXiv:2401.02954; hf"))

@@ -1,0 +1,32 @@
+"""gemma2-2b [dense]: 26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000.
+
+Local+global alternating attention, logit softcaps. [arXiv:2408.00118; hf]
+"""
+from repro.configs.common import ArchSpec, register
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b", family="dense",
+    n_layers=26, d_model=2304, n_heads=8, n_kv_heads=4, head_dim=256,
+    d_ff=9216, vocab_size=256000,
+    block_pattern=("local_attn", "attn"), window_size=4096,
+    attn_logit_softcap=50.0, final_logit_softcap=30.0,
+    act_fn="gelu_tanh", zero_centered_norm=True, post_block_norm=True,
+    embed_scale=True, tie_embeddings=True, rope_theta=10000.0,
+)
+
+SMOKE = ModelConfig(
+    name="gemma2-smoke", family="dense",
+    n_layers=4, d_model=96, n_heads=2, n_kv_heads=1, head_dim=32,
+    d_ff=192, vocab_size=512,
+    block_pattern=("local_attn", "attn"), window_size=64,
+    attn_logit_softcap=50.0, final_logit_softcap=30.0,
+    act_fn="gelu_tanh", zero_centered_norm=True, post_block_norm=True,
+    embed_scale=True, tie_embeddings=True, param_dtype="float32",
+)
+
+SPEC = register(ArchSpec(
+    arch_id="gemma2-2b", config=CONFIG, smoke=SMOKE,
+    source="arXiv:2408.00118; hf",
+    notes="softcap composes with BFP: cap on fp32 scores before P "
+          "conversion; local layers use the ring cache at decode"))

@@ -1,0 +1,29 @@
+"""internvl2-76b [vlm]: 80L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256.  InternViT frontend is a STUB — input_specs() provides
+precomputed patch embeddings prepended to the LM sequence.
+[arXiv:2404.16821; unverified]
+"""
+from repro.configs.common import ArchSpec, register
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=28672, vocab_size=128256,
+    rope_theta=500000.0, tie_embeddings=False,
+    frontend="vision_stub", n_frontend_tokens=256,
+)
+
+SMOKE = ModelConfig(
+    name="internvl2-smoke", family="vlm",
+    n_layers=3, d_model=96, n_heads=6, n_kv_heads=2, head_dim=32,
+    d_ff=192, vocab_size=512, tie_embeddings=False,
+    frontend="vision_stub", n_frontend_tokens=32, param_dtype="float32",
+)
+
+SPEC = register(ArchSpec(
+    arch_id="internvl2-76b", config=CONFIG, smoke=SMOKE,
+    source="arXiv:2404.16821; unverified",
+    notes="LM backbone only (Llama-3-70B-like); ViT is a stub per task "
+          "spec; vision tokens participate in the causal stream and the "
+          "asymmetric KV cache"))

@@ -1,0 +1,28 @@
+"""llama4-scout-17b-a16e [moe]: 48L d_model=5120 40H (GQA kv=8) expert
+d_ff=8192 vocab=202048, MoE 16 experts top-1 + shared expert (early
+fusion).  [hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+"""
+from repro.configs.common import ArchSpec, register
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab_size=202048,
+    n_experts=16, moe_top_k=1, shared_expert=True,
+    rope_theta=500000.0, tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="llama4-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=32,
+    d_ff=96, vocab_size=512,
+    n_experts=4, moe_top_k=1, shared_expert=True,
+    tie_embeddings=False, param_dtype="float32",
+)
+
+SPEC = register(ArchSpec(
+    arch_id="llama4-scout-17b-a16e", config=CONFIG, smoke=SMOKE,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+    notes="16 experts sharded 1:1 on the model axis (EP); shared expert "
+          "TP-sharded like a dense FFN; routers stay fp32"))

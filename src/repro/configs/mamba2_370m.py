@@ -1,0 +1,34 @@
+"""mamba2-370m [ssm]: 48L d_model=1024 (attention-free) vocab=50280,
+ssm_state=128.  SSD (state-space duality). [arXiv:2405.21060; unverified]
+
+d_inner = 2*d = 2048, head dim 64 -> 32 SSD heads, 1 B/C group.
+Harmonia applicability: BFP-INT on in/out projections only; no KV cache
+exists (O(1) recurrent state) — see DESIGN.md §Arch-applicability.
+"""
+from repro.configs.common import ArchSpec, register
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m", family="ssm",
+    n_layers=48, d_model=1024, n_heads=0, n_kv_heads=0, head_dim=0,
+    d_ff=0, vocab_size=50280,
+    block_pattern=("ssd",), mixer_only=True, pos_embed="none",
+    ssm_state=128, ssm_heads=32, ssm_groups=1, ssm_expand=2,
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-smoke", family="ssm",
+    n_layers=4, d_model=64, n_heads=0, n_kv_heads=0, head_dim=0,
+    d_ff=0, vocab_size=512,
+    block_pattern=("ssd",), mixer_only=True, pos_embed="none",
+    ssm_state=16, ssm_heads=4, ssm_groups=1, ssm_expand=2,
+    tie_embeddings=True, param_dtype="float32",
+)
+
+SPEC = register(ArchSpec(
+    arch_id="mamba2-370m", config=CONFIG, smoke=SMOKE,
+    source="arXiv:2405.21060; unverified",
+    notes="attention-free: paper's KV-cache technique inapplicable "
+          "(recurrent state is ~1e4x smaller than a 32k KV cache); "
+          "BFP-INT applies to all projections.  Runs long_500k."))

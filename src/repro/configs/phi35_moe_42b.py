@@ -1,0 +1,25 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 32L d_model=4096 32H (GQA kv=8) expert
+d_ff=6400 vocab=32064, MoE 16 experts top-2.
+[hf:microsoft/Phi-3.5-MoE-instruct; hf]
+"""
+from repro.configs.common import ArchSpec, register
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=6400, vocab_size=32064,
+    n_experts=16, moe_top_k=2,
+    rope_theta=10000.0, tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="phi35-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=32,
+    d_ff=96, vocab_size=512,
+    n_experts=4, moe_top_k=2, tie_embeddings=False, param_dtype="float32",
+)
+
+SPEC = register(ArchSpec(
+    arch_id="phi3.5-moe-42b-a6.6b", config=CONFIG, smoke=SMOKE,
+    source="hf:microsoft/Phi-3.5-MoE-instruct; hf"))

@@ -1,0 +1,25 @@
+"""qwen2.5-32b [dense]: 64L d_model=5120 40H (GQA kv=8) d_ff=27648
+vocab=152064.  GQA with QKV bias. [hf:Qwen/Qwen2.5-*; hf]
+"""
+from repro.configs.common import ArchSpec, register
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b", family="dense",
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=27648, vocab_size=152064,
+    qkv_bias=True, rope_theta=1000000.0, tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="qwen25-smoke", family="dense",
+    n_layers=3, d_model=96, n_heads=6, n_kv_heads=2, head_dim=32,
+    d_ff=256, vocab_size=512,
+    qkv_bias=True, tie_embeddings=False, param_dtype="float32",
+)
+
+SPEC = register(ArchSpec(
+    arch_id="qwen2.5-32b", config=CONFIG, smoke=SMOKE,
+    source="hf:Qwen/Qwen2.5-0.5B (family); hf",
+    notes="40 heads vs model=16 mesh: QKV columns sharded in units of the "
+          "flat projection dim; GSPMD reshards per-head ops"))

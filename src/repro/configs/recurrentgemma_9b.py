@@ -1,0 +1,35 @@
+"""recurrentgemma-9b [hybrid]: 38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000.  RG-LRU + local attention, 2 recurrent : 1 attention
+(38 = 12x(r,r,a) + 2 remainder recurrent blocks).
+[arXiv:2402.19427; unverified]
+"""
+from repro.configs.common import ArchSpec, register
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1, head_dim=256,
+    d_ff=12288, vocab_size=256000,
+    block_pattern=("rglru", "rglru", "local_attn"), window_size=2048,
+    lru_width=4096, lru_blocks=16,
+    act_fn="gelu_tanh", zero_centered_norm=True, embed_scale=True,
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="recurrentgemma-smoke", family="hybrid",
+    n_layers=5, d_model=64, n_heads=2, n_kv_heads=1, head_dim=32,
+    d_ff=128, vocab_size=512,
+    block_pattern=("rglru", "rglru", "local_attn"), window_size=64,
+    lru_width=64, lru_blocks=4,
+    act_fn="gelu_tanh", zero_centered_norm=True, embed_scale=True,
+    tie_embeddings=True, param_dtype="float32",
+)
+
+SPEC = register(ArchSpec(
+    arch_id="recurrentgemma-9b", config=CONFIG, smoke=SMOKE,
+    source="arXiv:2402.19427; unverified",
+    notes="sub-quadratic (local attn + O(1) recurrence) -> runs long_500k; "
+          "local layers use the 8-bit BFP ring cache (sliding window "
+          "evicts the paper's sink region by design); RG-LRU recurrence "
+          "stays fp32 (KV technique inapplicable)"))

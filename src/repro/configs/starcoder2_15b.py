@@ -1,0 +1,25 @@
+"""starcoder2-15b [dense]: 40L d_model=6144 48H (GQA kv=4) d_ff=24576
+vocab=49152.  GQA + RoPE, plain MLP, layernorm, biases. [arXiv:2402.19173; hf]
+"""
+from repro.configs.common import ArchSpec, register
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b", family="dense",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=4, head_dim=128,
+    d_ff=24576, vocab_size=49152,
+    qkv_bias=True, mlp_style="plain", norm_type="layer", norm_eps=1e-5,
+    act_fn="gelu_tanh", rope_theta=100000.0, tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="starcoder2-smoke", family="dense",
+    n_layers=3, d_model=96, n_heads=6, n_kv_heads=2, head_dim=32,
+    d_ff=192, vocab_size=512,
+    qkv_bias=True, mlp_style="plain", norm_type="layer", norm_eps=1e-5,
+    act_fn="gelu_tanh", tie_embeddings=True, param_dtype="float32",
+)
+
+SPEC = register(ArchSpec(
+    arch_id="starcoder2-15b", config=CONFIG, smoke=SMOKE,
+    source="arXiv:2402.19173; hf"))

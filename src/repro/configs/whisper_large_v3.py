@@ -1,0 +1,32 @@
+"""whisper-large-v3 [audio]: enc-dec, 32L each, d_model=1280 20H kv=20
+d_ff=5120 vocab=51866.  Conv frontend is a STUB — input_specs() provides
+precomputed frame embeddings (B, 1500, d). [arXiv:2212.04356; unverified]
+"""
+from repro.configs.common import ArchSpec, register
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3", family="audio",
+    n_layers=32, d_model=1280, n_heads=20, n_kv_heads=20, head_dim=64,
+    d_ff=5120, vocab_size=51866,
+    encoder_layers=32, encoder_tokens=1500, cross_attention=True,
+    pos_embed="sinusoidal", mlp_style="plain", norm_type="layer",
+    norm_eps=1e-5, act_fn="gelu", tie_embeddings=True,
+    frontend="audio_stub",
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke", family="audio",
+    n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+    d_ff=128, vocab_size=512,
+    encoder_layers=2, encoder_tokens=64, cross_attention=True,
+    pos_embed="sinusoidal", mlp_style="plain", norm_type="layer",
+    norm_eps=1e-5, act_fn="gelu", tie_embeddings=True,
+    frontend="audio_stub", param_dtype="float32",
+)
+
+SPEC = register(ArchSpec(
+    arch_id="whisper-large-v3", config=CONFIG, smoke=SMOKE,
+    source="arXiv:2212.04356; unverified",
+    notes="decoder self-attn uses the asymmetric BFP cache; cross-attn K/V "
+          "are static per request (quantized once at prefill)"))

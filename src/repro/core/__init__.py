@@ -1,0 +1,9 @@
+"""Harmonia core: BFP numerics, quant configs, smoothing, asymmetric KV cache."""
+from repro.core.bfp import (BfpConfig, bfp_fake_quant, bfp_quantize,
+                            bfp_dequantize, pack_int4, unpack_int4)
+from repro.core.quant_config import (QuantConfig, KvQuantConfig,
+                                     SmoothingConfig, get_recipe)
+
+__all__ = ["BfpConfig", "bfp_fake_quant", "bfp_quantize", "bfp_dequantize",
+           "pack_int4", "unpack_int4", "QuantConfig", "KvQuantConfig",
+           "SmoothingConfig", "get_recipe"]

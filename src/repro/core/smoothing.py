@@ -1,0 +1,130 @@
+"""Offline-online hybrid outlier smoothing (paper Sec. III-C).
+
+Offline: a learnable per-channel scale ``S`` (one per K channel) multiplies
+K and divides Q, preserving ``softmax(Q K^T)`` exactly (Eq. 1).  Because Q
+and K are linear projections of the block input, S is *folded into the
+projection weights* (Eq. 2):
+
+    W_Q' = W_Q / S      (columns scaled)
+    W_K' = W_K * S
+
+so runtime needs no extra work.  S is learned on a calibration set to
+minimize the block-output MSE under BFP conversion (Eq. 3) — see
+``repro.quant.calibrate``.
+
+Online: K exhibits intra-channel similarity across tokens, and softmax is
+shift-invariant when the *same* offset vector is subtracted from every key:
+``q·(k_t - o) = q·k_t - q·o`` shifts all logits of a query equally.  We
+compute per-channel offsets from the first ``window`` (=32) tokens, zero
+everywhere except the top-k outlier channels where the offset is half the
+value at max magnitude, and subtract them from *all* keys (including the
+initial window, which is still resident when the offsets are derived —
+this keeps the shift exactly uniform across tokens, required for
+invariance).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OnlineOffsets(NamedTuple):
+    """Per-(kv-head, channel) offsets derived from the initial window."""
+
+    offsets: jax.Array  # (..., n_kv_heads, head_dim) float32
+
+
+def compute_online_offsets(k_window: jax.Array, top_k: int = 16) -> jax.Array:
+    """Paper's lightweight offset selection.
+
+    Args:
+      k_window: keys of the initial window, shape (..., W, n_kv, hd) or
+        (W, hd); the token axis is -3rd when heads present else -2nd.
+        We accept (..., tokens, channels) with channels last after head
+        flattening — callers pass (B, W, n_kv, hd).
+      top_k: number of channels (per head) that receive a non-zero offset.
+
+    Returns offsets with the token axis reduced away: (..., n_kv, hd).
+    """
+    # token axis is -3 for (B, W, n_kv, hd); reduce over it.
+    token_axis = -3 if k_window.ndim >= 3 else -2
+    absk = jnp.abs(k_window)
+    idx = jnp.argmax(absk, axis=token_axis)                     # (..., n_kv, hd)
+    # gather the signed value at the argmax via a one-hot contraction
+    # (take_along_axis with batching dims trips older gather lowerings)
+    w = k_window.shape[token_axis]
+    oh = jax.nn.one_hot(idx, w, dtype=k_window.dtype)           # (..., n_kv, hd, W)
+    kw = jnp.moveaxis(k_window, token_axis, -1)                 # (..., n_kv, hd, W)
+    val_at_max = jnp.sum(kw * oh, axis=-1)                       # signed
+    mag = jnp.max(absk, axis=token_axis)                         # (..., n_kv, hd)
+
+    hd = mag.shape[-1]
+    k = min(top_k, hd)
+    # threshold = k-th largest magnitude per head.  Channel *selection* is
+    # discrete — computed under stop_gradient (calibration gradients flow
+    # through the offset values, not the selection).
+    mag_sg = jax.lax.stop_gradient(mag)
+    thresh = jax.lax.top_k(mag_sg, k)[0][..., -1:]
+    mask = mag_sg >= thresh
+    # offset = half of the (signed) value with the largest magnitude
+    return jnp.where(mask, 0.5 * val_at_max, 0.0)
+
+
+def apply_online_offsets(k: jax.Array, offsets: jax.Array) -> jax.Array:
+    """Subtract the per-channel offsets from every key token.
+
+    k: (..., S, n_kv, hd); offsets: (..., n_kv, hd) broadcast over S."""
+    return k - jnp.expand_dims(offsets, -3)
+
+
+def fold_offline_scale(w_q: jax.Array, w_k: jax.Array,
+                       scale: jax.Array):
+    """Fold the per-channel scale into the Q/K projection weights (Eq. 2).
+
+    w_q, w_k: (d_model, n_heads*hd) / (d_model, n_kv*hd) column layout where
+    the last dim is the K-channel dim (per-head channels flattened).
+    scale: (n_kv*hd,) positive.  Q columns are *divided*; because Q may have
+    more heads than K (GQA), the scale is tiled across the query-head
+    groups.
+    """
+    kd = w_k.shape[-1]
+    qd = w_q.shape[-1]
+    if qd % kd != 0:
+        raise ValueError(f"q dim {qd} not a multiple of k dim {kd}")
+    rep = qd // kd
+    q_scale = jnp.tile(scale, rep)
+    return w_q / q_scale, w_k * scale
+
+
+def fold_offline_scale_params(params: dict, layer_scales: jax.Array) -> dict:
+    """Fold stacked per-layer scales into stacked scan-layout QKV weights.
+
+    ``params`` is a model param tree with ``wq``/``wk`` stacked over layers
+    (leading layer axis); ``layer_scales`` has shape (L, n_kv*hd).
+    Returns a new tree (pure function).
+    """
+    wq, wk = params["wq"], params["wk"]
+    qd, kd = wq.shape[-1], wk.shape[-1]
+    rep = qd // kd
+    q_scale = jnp.tile(layer_scales, (1, rep))[:, None, :]  # (L, 1, qd)
+    k_scale = layer_scales[:, None, :]                      # (L, 1, kd)
+    new = dict(params)
+    new["wq"] = wq / q_scale
+    new["wk"] = wk * k_scale
+    return new
+
+
+def smoothing_identity_check(q: jax.Array, k: jax.Array,
+                             scale: jax.Array) -> jax.Array:
+    """Numerical identity behind Eq. 1: logits unchanged by (Q/S)·(K*S)^T."""
+    base = jnp.einsum("...qd,...kd->...qk", q, k)
+    smoothed = jnp.einsum("...qd,...kd->...qk", q / scale, k * scale)
+    return jnp.max(jnp.abs(base - smoothed))
+
+
+__all__ = ["OnlineOffsets", "compute_online_offsets", "apply_online_offsets",
+           "fold_offline_scale", "fold_offline_scale_params",
+           "smoothing_identity_check"]

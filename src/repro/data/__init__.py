@@ -1,0 +1,1 @@
+"""Data substrate: tokenizer, corpus, deterministic batched pipeline."""

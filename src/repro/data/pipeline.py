@@ -1,0 +1,65 @@
+"""Deterministic, resumable batched token pipeline.
+
+Design points that matter at scale:
+  * deterministic as a function of (seed, step) — resuming after a crash
+    at step k reproduces exactly the batches a non-crashed run would have
+    seen (fault-tolerance requirement; see train.py),
+  * sharded reads — each data-parallel host slices its rows from the
+    global batch by rank (here single-process, but the indexing is rank-
+    aware),
+  * O(1) state: the pipeline carries only (seed, step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import numpy as np
+
+from repro.data.corpus import build_corpus
+from repro.data.tokenizer import ByteTokenizer
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    batch_size: int = 8
+    seq_len: int = 256
+    seed: int = 0
+    corpus_bytes: int = 2 << 20
+    rank: int = 0
+    world: int = 1
+
+
+class TokenPipeline:
+    def __init__(self, cfg: PipelineConfig, vocab_size: int = None):
+        self.cfg = cfg
+        self.tok = ByteTokenizer()
+        text = build_corpus(cfg.corpus_bytes, cfg.seed)
+        ids = np.frombuffer(text.encode("utf-8", errors="replace"),
+                            dtype=np.uint8).astype(np.int32)
+        if vocab_size is not None and vocab_size < 256:
+            ids = ids % vocab_size
+        self.ids = ids
+        self.n = len(ids)
+
+    def batch_at(self, step: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(tokens, labels) for a global step — pure function of step."""
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed << 20) ^ step)
+        rows_global = cfg.batch_size * cfg.world
+        starts = rng.integers(0, self.n - cfg.seq_len - 1, size=rows_global)
+        starts = starts[cfg.rank * cfg.batch_size:
+                        (cfg.rank + 1) * cfg.batch_size]
+        toks = np.stack([self.ids[s:s + cfg.seq_len] for s in starts])
+        lbls = np.stack([self.ids[s + 1:s + cfg.seq_len + 1]
+                         for s in starts])
+        return toks, lbls
+
+    def iterate(self, start_step: int = 0) -> Iterator:
+        step = start_step
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+__all__ = ["PipelineConfig", "TokenPipeline"]

@@ -1,0 +1,261 @@
+"""BFP-BFP attention kernels — the paper's M8M8 / M8M4 PE modes on TPU.
+
+Prefill: flash-attention (online softmax) over BFP-compressed K/V tiles,
+dequantized in VMEM right before the MXU dots.  K is per-token grouped
+along head_dim; V is token-grouped (the P.V contraction direction,
+paper Fig. 6a) so its shared exponents index (S/32, hd).
+
+Decode: one-step attention of a kv-head's query group against the 4-bit
+*bulk* region of the asymmetric cache (the big, bandwidth-critical read:
+4.25 bits/value instead of 16).  Returns the unnormalized flash triple
+(o, m, l) so the XLA epilogue merges it with the small 8-bit init/local/
+residual regions.
+
+P is kept fp32 inside the kernels: on TPU the MXU consumes fp natively, so
+the ASIC's P->BFP conversion (which exists to feed integer PEs) would only
+lose accuracy without a perf win — recorded in DESIGN.md §2.  The P-BFP
+numerics are exercised by the fake-quant eval path instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GROUP = 32
+NEG_INF = -1e30
+
+
+def _dq_k_tile(k_mant, k_exp, mantissa_bits):
+    """(bs, hd) int8 + (bs, hd/32) -> (bs, hd) f32 (per-token groups)."""
+    bs, hd = k_mant.shape
+    step = jnp.exp2(k_exp.astype(jnp.float32) - (mantissa_bits - 2))
+    return (k_mant.astype(jnp.float32).reshape(bs, hd // GROUP, GROUP)
+            * step[..., None]).reshape(bs, hd)
+
+
+def _dq_v_tile(v_mant, v_exp, mantissa_bits):
+    """(bs, hd) int8 + (bs/32, hd) -> (bs, hd) f32 (token groups)."""
+    bs, hd = v_mant.shape
+    step = jnp.exp2(v_exp.astype(jnp.float32) - (mantissa_bits - 2))
+    return (v_mant.astype(jnp.float32).reshape(bs // GROUP, GROUP, hd)
+            * step[:, None, :]).reshape(bs, hd)
+
+
+# ---------------------------------------------------------------------------
+# Prefill (flash)
+# ---------------------------------------------------------------------------
+
+def _prefill_kernel(q_ref, km_ref, ke_ref, vm_ref, ve_ref, o_ref,
+                    acc_ref, m_ref, l_ref, *, mantissa_bits, causal,
+                    logit_cap, window, block_q, block_s, n_s):
+    iq, ik = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)                     # (bq, hd)
+    hd = q.shape[-1]
+    k = _dq_k_tile(km_ref[...], ke_ref[...], mantissa_bits)
+    v = _dq_v_tile(vm_ref[...], ve_ref[...], mantissa_bits)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) \
+        / jnp.sqrt(float(hd))                              # (bq, bs)
+    if logit_cap > 0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    s.shape, 0)
+    k_pos = ik * block_s + jax.lax.broadcasted_iota(jnp.int32,
+                                                    s.shape, 1)
+    mask = jnp.ones(s.shape, jnp.bool_)
+    if causal:
+        d = q_pos - k_pos
+        mask = d >= 0
+        if window > 0:
+            mask &= d < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                    # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_s - 1)
+    def _fin():
+        l = l_ref[...]
+        o_ref[...] = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30),
+                               0.0).astype(o_ref.dtype)
+
+
+def bfp_attention_prefill_kernel(q, k_mant, k_exp, v_mant, v_exp, *,
+                                 mantissa_bits: int = 8,
+                                 causal: bool = True,
+                                 logit_cap: float = 0.0, window: int = 0,
+                                 block_q: int = 128, block_s: int = 128,
+                                 out_dtype=jnp.float32,
+                                 interpret: bool = False):
+    """Single-head: q (S, hd) fp; K (S, hd)+(S, hd/32); V (S, hd)+(S/32, hd).
+
+    Vmap over (batch, head) in ops.py.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    S, hd = q.shape
+    bq = min(block_q, S)
+    bs = min(block_s, S)
+    if S % bq:
+        bq = S
+    if S % bs:
+        bs = S
+    n_s = S // bs
+    kernel = functools.partial(
+        _prefill_kernel, mantissa_bits=mantissa_bits, causal=causal,
+        logit_cap=logit_cap, window=window, block_q=bq, block_s=bs, n_s=n_s)
+    return pl.pallas_call(
+        kernel,
+        grid=(S // bq, n_s),
+        in_specs=[
+            pl.BlockSpec((bq, hd), lambda i, j: (i, 0)),
+            pl.BlockSpec((bs, hd), lambda i, j: (j, 0)),
+            pl.BlockSpec((bs, hd // GROUP), lambda i, j: (j, 0)),
+            pl.BlockSpec((bs, hd), lambda i, j: (j, 0)),
+            pl.BlockSpec((bs // GROUP, hd), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, hd), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, hd), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_mant, k_exp, v_mant, v_exp)
+
+
+# ---------------------------------------------------------------------------
+# Decode (bulk region, 4-bit)
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(len_ref, q_ref, km_ref, ke_ref, vm_ref, ve_ref,
+                   o_ref, m_out_ref, l_out_ref, acc_ref, m_ref, l_ref, *,
+                   block_s, n_s):
+    ik = pl.program_id(0)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)                     # (rep, hd)
+    hd = q.shape[-1]
+
+    km = km_ref[...]                                       # (bs, hd/2) nibbles
+    kmu = km.astype(jnp.uint8)
+    lo = (kmu & 0xF).astype(jnp.int32)
+    hi = ((kmu >> 4) & 0xF).astype(jnp.int32)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    k_int = jnp.stack([lo, hi], axis=-1).reshape(km.shape[0], hd)
+    kstep = jnp.exp2(ke_ref[...].astype(jnp.float32) - 2.0)  # m=4
+    k = (k_int.astype(jnp.float32).reshape(-1, hd // GROUP, GROUP)
+         * kstep[..., None]).reshape(-1, hd)               # (bs, hd)
+
+    vm = vm_ref[...]                                       # (bs/2, hd) pairs
+    vmu = vm.astype(jnp.uint8)
+    vlo = (vmu & 0xF).astype(jnp.int32)
+    vhi = ((vmu >> 4) & 0xF).astype(jnp.int32)
+    vlo = jnp.where(vlo >= 8, vlo - 16, vlo)
+    vhi = jnp.where(vhi >= 8, vhi - 16, vhi)
+    v_int = jnp.stack([vlo, vhi], axis=1).reshape(-1, hd)  # (bs, hd)
+    vstep = jnp.exp2(ve_ref[...].astype(jnp.float32) - 2.0)  # (bs/32, hd)
+    v = (v_int.astype(jnp.float32).reshape(-1, GROUP, hd)
+         * vstep[:, None, :]).reshape(-1, hd)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) \
+        / jnp.sqrt(float(hd))                              # (rep, bs)
+    pos = ik * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_s - 1)
+    def _fin():
+        o_ref[...] = acc_ref[...]
+        m_out_ref[...] = m_ref[...]
+        l_out_ref[...] = l_ref[...]
+
+
+def bfp_attention_decode_kernel(q, k_mant4, k_exp, v_mant4, v_exp,
+                                valid_len, *, block_s: int = 512,
+                                interpret: bool = False):
+    """One kv-head decode over the 4-bit bulk region.
+
+    q: (rep, hd) — the query-head group of this kv head;
+    k_mant4: (S, hd/2) int8 nibbles (packed along hd);
+    k_exp: (S, hd/32); v_mant4: (S/2, hd) nibbles (packed along tokens);
+    v_exp: (S/32, hd); valid_len: () int32.
+
+    Returns the flash triple (o (rep, hd) unnormalized, m (rep, 1),
+    l (rep, 1)) for merging with the 8-bit regions.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    S = k_mant4.shape[0]
+    rep, hd = q.shape
+    bs = min(block_s, S)
+    if S % bs:
+        bs = S
+    n_s = S // bs
+    kernel = functools.partial(_decode_kernel, block_s=bs, n_s=n_s)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_s,),
+        in_specs=[
+            pl.BlockSpec((rep, hd), lambda j, *_: (0, 0)),
+            pl.BlockSpec((bs, hd // 2), lambda j, *_: (j, 0)),
+            pl.BlockSpec((bs, hd // GROUP), lambda j, *_: (j, 0)),
+            pl.BlockSpec((bs // 2, hd), lambda j, *_: (j, 0)),
+            pl.BlockSpec((bs // GROUP, hd), lambda j, *_: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rep, hd), lambda j, *_: (0, 0)),
+            pl.BlockSpec((rep, 1), lambda j, *_: (0, 0)),
+            pl.BlockSpec((rep, 1), lambda j, *_: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rep, hd), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((rep, hd), jnp.float32),
+            jax.ShapeDtypeStruct((rep, 1), jnp.float32),
+            jax.ShapeDtypeStruct((rep, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(valid_len, jnp.int32).reshape(1), q, k_mant4, k_exp,
+      v_mant4, v_exp)
+
+
+__all__ = ["bfp_attention_prefill_kernel", "bfp_attention_decode_kernel"]

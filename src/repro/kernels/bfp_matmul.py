@@ -1,0 +1,159 @@
+"""BFP-INT GEMM kernel — the Harmonia PE array's M8W4 mode on TPU.
+
+Operands stay compressed in HBM (int8 mantissas + per-group-32 exponents
+for activations; INT4 nibbles + per-group-128 fp32 scales for weights) and
+are dequantized *in VMEM* immediately before an MXU dot — the TPU-native
+realization of the paper's integer PE + shared-exponent scaling (see
+DESIGN.md §2).  fp32 accumulation (stronger than the ASIC's shared FP
+accumulator).
+
+Tiling-aware dataflow (paper Sec. IV-D / FDGF): the full contraction dim
+lives in VMEM, and the grid order decides which operand stays resident:
+
+  * ``weight_stationary``  (paper's column-major output flow): grid
+    (N/bn, M/bm) — the (K, bn) weight tile is revisited across the inner
+    M sweep, weights are read from HBM exactly once;
+  * ``act_stationary``     (row-major output flow): grid (M/bm, N/bn) —
+    the (bm, K) activation tile is revisited, activations read once.
+
+``choose_dataflow`` applies the paper's EMA formulas
+(col: K/k·(M·N)+N·K  vs  row: M/m·(N·K)+M·N) to pick the cheaper one as a
+function of the runtime token count M.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GROUP_A = 32
+GROUP_W = 128
+
+
+def _unpack_w(wp, bk):
+    """(bk/2, bn) int8 nibbles -> (bk, bn) int32 in [-8, 7]."""
+    wpu = wp.astype(jnp.uint8)
+    lo = (wpu & 0xF).astype(jnp.int32)
+    hi = ((wpu >> 4) & 0xF).astype(jnp.int32)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    w = jnp.stack([lo, hi], axis=1)                  # (bk/2, 2, bn)
+    return w.reshape(bk, wp.shape[-1])
+
+
+def _mm_kernel(a_mant_ref, a_exp_ref, w_packed_ref, w_scale_ref, out_ref, *,
+               mantissa_bits: int, out_dtype):
+    a_m = a_mant_ref[...].astype(jnp.float32)        # (bm, K)
+    bm, K = a_m.shape
+    step = jnp.exp2(a_exp_ref[...].astype(jnp.float32)
+                    - (mantissa_bits - 2))           # (bm, K/32)
+    a = (a_m.reshape(bm, K // GROUP_A, GROUP_A)
+         * step[..., None]).reshape(bm, K)
+
+    w_int = _unpack_w(w_packed_ref[...], K).astype(jnp.float32)
+    bn = w_int.shape[-1]
+    ws = w_scale_ref[...]                            # (K/128, bn)
+    w = (w_int.reshape(K // GROUP_W, GROUP_W, bn)
+         * ws[:, None, :]).reshape(K, bn)
+
+    out_ref[...] = jnp.dot(a, w, preferred_element_type=jnp.float32
+                           ).astype(out_dtype)
+
+
+def _mm_int_kernel(a_mant_ref, a_exp_ref, w_packed_ref, w_scale_ref,
+                   out_ref, *, mantissa_bits: int, out_dtype):
+    """Integer-subdot variant: per-32-group int32 dot products with fp32
+    cross-group accumulation — the literal Harmonia PE dataflow.  On MXU
+    this underutilizes the K=32 contraction (documented trade-off); kept
+    for numerical comparison and as the int8-MXU path."""
+    a_m = a_mant_ref[...].astype(jnp.int32)
+    bm, K = a_m.shape
+    nga = K // GROUP_A
+    w_int = _unpack_w(w_packed_ref[...], K).astype(jnp.int32)
+    bn = w_int.shape[-1]
+    a_g = a_m.reshape(bm, nga, GROUP_A)
+    w_g = w_int.reshape(nga, GROUP_A, bn)
+    # integer partial products per shared-exponent group
+    pp = jax.lax.dot_general(
+        a_g.astype(jnp.float32), w_g.astype(jnp.float32),
+        (((2,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32)          # (nga, bm, bn)
+    a_step = jnp.exp2(a_exp_ref[...].astype(jnp.float32)
+                      - (mantissa_bits - 2))         # (bm, nga)
+    ws = w_scale_ref[...]                            # (K/128, bn)
+    ws_g = jnp.repeat(ws, GROUP_W // GROUP_A, axis=0)  # (nga, bn)
+    acc = jnp.sum(pp * a_step.T[:, :, None] * ws_g[:, None, :], axis=0)
+    out_ref[...] = acc.astype(out_dtype)
+
+
+def choose_dataflow(M: int, N: int, K: int, bm: int = 128,
+                    bn: int = 128) -> str:
+    """Paper Fig. 15 EMA model, in element-loads (bytes cancel out for the
+    comparison since both operands are ~4-bit-per-element compressed)."""
+    ema_weight_stationary = N * K + (N // max(bn, 1)) * M * K
+    ema_act_stationary = M * K + (M // max(bm, 1)) * K * N
+    return ("weight_stationary"
+            if ema_weight_stationary <= ema_act_stationary
+            else "act_stationary")
+
+
+def bfp_matmul_kernel(a_mant, a_exp, w_packed, w_scale, *,
+                      mantissa_bits: int = 8, block_m: int = 128,
+                      block_n: int = 128, dataflow: str = "auto",
+                      int_path: bool = False, out_dtype=jnp.float32,
+                      interpret: bool = False):
+    """(M, K)x(K, N) BFP-INT GEMM on packed operands.
+
+    a_mant (M, K) int8; a_exp (M, K/32) int8; w_packed (K/2, N) int8;
+    w_scale (K/128, N) f32.
+    """
+    M, K = a_mant.shape
+    N = w_packed.shape[-1]
+    if K % GROUP_W:
+        raise ValueError(f"K={K} must be a multiple of {GROUP_W}")
+    bm = min(block_m, M)
+    bn = min(block_n, N)
+    if M % bm:
+        bm = M
+    if N % bn:
+        bn = N
+    if dataflow == "auto":
+        dataflow = choose_dataflow(M, N, K, bm, bn)
+
+    body = _mm_int_kernel if int_path else _mm_kernel
+    kernel = functools.partial(body, mantissa_bits=mantissa_bits,
+                               out_dtype=out_dtype)
+    out_shape = jax.ShapeDtypeStruct((M, N), out_dtype)
+
+    if dataflow == "act_stationary":
+        # grid (i, j): activation tile index (i, 0) constant across inner j
+        grid = (M // bm, N // bn)
+        in_specs = [
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, K // GROUP_A), lambda i, j: (i, 0)),
+            pl.BlockSpec((K // 2, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((K // GROUP_W, bn), lambda i, j: (0, j)),
+        ]
+        out_specs = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    elif dataflow == "weight_stationary":
+        # grid (j, i): weight tile index (0, j) constant across inner i
+        grid = (N // bn, M // bm)
+        in_specs = [
+            pl.BlockSpec((bm, K), lambda j, i: (i, 0)),
+            pl.BlockSpec((bm, K // GROUP_A), lambda j, i: (i, 0)),
+            pl.BlockSpec((K // 2, bn), lambda j, i: (0, j)),
+            pl.BlockSpec((K // GROUP_W, bn), lambda j, i: (0, j)),
+        ]
+        out_specs = pl.BlockSpec((bm, bn), lambda j, i: (i, j))
+    else:
+        raise ValueError(f"unknown dataflow {dataflow!r}")
+
+    return pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret,
+    )(a_mant, a_exp, w_packed, w_scale)
+
+
+__all__ = ["bfp_matmul_kernel", "choose_dataflow"]

@@ -1,0 +1,76 @@
+"""Real-time FP->BFP converter kernel (paper Sec. IV-C, TPU-adapted).
+
+The ASIC converter sits on the PE-array output path; on TPU the same role
+is a VMEM-tiled Pallas kernel that streams an fp tile, reduces the
+per-group max exponent, shifts/truncates mantissas, and writes the packed
+(mant, exp) pair — used to keep activations BFP-compressed in HBM.
+
+Grid: (M/bm, K/bk); per-token groups of 32 along K (bk % 32 == 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bfp import EXP_MAX, EXP_MIN
+
+GROUP = 32
+
+
+def _quant_kernel(x_ref, mant_ref, exp_ref, *, mantissa_bits: int,
+                  rounding: str):
+    x = x_ref[...].astype(jnp.float32)                 # (bm, bk)
+    bm, bk = x.shape
+    g = x.reshape(bm, bk // GROUP, GROUP)
+    absmax = jnp.max(jnp.abs(g), axis=-1)              # (bm, bk/32)
+    safe = jnp.where(absmax > 0, absmax, 1.0)
+    e = jnp.floor(jnp.log2(safe))
+    e = jnp.where(absmax > 0, e, float(EXP_MIN))
+    e = jnp.clip(e, EXP_MIN, EXP_MAX)
+    step = jnp.exp2(e - (mantissa_bits - 2))
+    scaled = g / step[..., None]
+    m = jnp.trunc(scaled) if rounding == "trunc" else jnp.round(scaled)
+    lim = float(2 ** (mantissa_bits - 1) - 1)
+    m = jnp.clip(m, -lim, lim)
+    mant_ref[...] = m.reshape(bm, bk).astype(jnp.int8)
+    exp_ref[...] = e.astype(jnp.int8)
+
+
+def bfp_quantize_kernel(x: jax.Array, *, mantissa_bits: int = 8,
+                        rounding: str = "trunc", block_m: int = 256,
+                        block_k: int = 512, interpret: bool = False):
+    """x: (M, K) fp -> (mant int8 (M, K), exp int8 (M, K/32)).
+
+    K must be a multiple of 32; blocks are clamped to the array."""
+    M, K = x.shape
+    if K % GROUP:
+        raise ValueError(f"K={K} must be a multiple of {GROUP}")
+    bm = min(block_m, M)
+    bk = min(block_k, K)
+    if K % bk:
+        bk = K  # fall back to one K block when not divisible
+    if M % bm:
+        bm = M
+    grid = (M // bm, K // bk)
+    kernel = functools.partial(_quant_kernel, mantissa_bits=mantissa_bits,
+                               rounding=rounding)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk // GROUP), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K), jnp.int8),
+            jax.ShapeDtypeStruct((M, K // GROUP), jnp.int8),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+__all__ = ["bfp_quantize_kernel"]

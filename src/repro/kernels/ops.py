@@ -1,0 +1,139 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites run
+everywhere (CPU CI validates kernel numerics; TPU compiles the real
+Mosaic kernels).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfp
+from repro.kernels.bfp_attention import (bfp_attention_decode_kernel,
+                                         bfp_attention_prefill_kernel)
+from repro.kernels.bfp_matmul import bfp_matmul_kernel, choose_dataflow
+from repro.kernels.bfp_quant import bfp_quantize_kernel
+
+GROUP = 32
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("mantissa_bits", "rounding", "interpret"))
+def bfp_quantize(x, mantissa_bits: int = 8, rounding: str = "trunc",
+                 interpret: Optional[bool] = None):
+    """(..., K) fp -> (mant int8 (..., K), exp int8 (..., K/32))."""
+    interpret = _default_interpret() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m, e = bfp_quantize_kernel(x2, mantissa_bits=mantissa_bits,
+                               rounding=rounding, interpret=interpret)
+    return (m.reshape(lead + (x.shape[-1],)),
+            e.reshape(lead + (x.shape[-1] // GROUP,)))
+
+
+@partial(jax.jit, static_argnames=("mantissa_bits", "dataflow", "int_path",
+                                   "interpret"))
+def bfp_matmul(a_mant, a_exp, w_packed, w_scale, mantissa_bits: int = 8,
+               dataflow: str = "auto", int_path: bool = False,
+               interpret: Optional[bool] = None):
+    """Packed BFP-INT GEMM; leading activation dims are flattened to M."""
+    interpret = _default_interpret() if interpret is None else interpret
+    lead = a_mant.shape[:-1]
+    K = a_mant.shape[-1]
+    am = a_mant.reshape(-1, K)
+    ae = a_exp.reshape(-1, K // GROUP)
+    out = bfp_matmul_kernel(am, ae, w_packed, w_scale,
+                            mantissa_bits=mantissa_bits, dataflow=dataflow,
+                            int_path=int_path, interpret=interpret)
+    return out.reshape(lead + (w_packed.shape[-1],))
+
+
+@partial(jax.jit, static_argnames=("mantissa_bits", "dataflow", "interpret"))
+def bfp_linear(x, w_packed, w_scale, mantissa_bits: int = 8,
+               dataflow: str = "auto", interpret: Optional[bool] = None):
+    """Fused convenience: FP activations -> BFP (kernel) -> BFP-INT GEMM.
+
+    This is the full Harmonia linear-layer path: the converter keeps x
+    compressed between layers; the GEMM consumes packed operands."""
+    am, ae = bfp_quantize(x, mantissa_bits, interpret=interpret)
+    return bfp_matmul(am, ae, w_packed, w_scale, mantissa_bits,
+                      dataflow, interpret=interpret)
+
+
+def quantize_v_token_grouped(v, mantissa_bits: int = 8):
+    """(S, hd) fp -> token-grouped packed V: (mant (S, hd), exp (S/32, hd))."""
+    S, hd = v.shape
+    m, e = bfp.bfp_quantize(v, GROUP, mantissa_bits, axis=0)
+    # bfp_quantize moves axis 0 last: m (hd, S/32, 32), e (hd, S/32)
+    m = jnp.moveaxis(m, (0, 1, 2), (2, 0, 1)).reshape(S, hd)
+    return m, e.T
+
+
+@partial(jax.jit, static_argnames=("mantissa_bits", "causal", "logit_cap",
+                                   "window", "interpret"))
+def bfp_attention_prefill(q, k_mant, k_exp, v_mant, v_exp,
+                          mantissa_bits: int = 8, causal: bool = True,
+                          logit_cap: float = 0.0, window: int = 0,
+                          interpret: Optional[bool] = None):
+    """Batched GQA prefill attention on packed K/V.
+
+    q: (B, S, H, hd); K: (B, S, Hkv, hd)+(B, S, Hkv, hd/32);
+    V token-grouped: (B, S, Hkv, hd)+(B, S/32, Hkv, hd).
+    Returns (B, S, H, hd) f32."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, S, H, hd = q.shape
+    Hkv = k_mant.shape[2]
+    rep = H // Hkv
+
+    single = partial(bfp_attention_prefill_kernel,
+                     mantissa_bits=mantissa_bits, causal=causal,
+                     logit_cap=logit_cap, window=window,
+                     interpret=interpret)
+    # vmap: rep (q only) -> kv head -> batch
+    f = jax.vmap(single, in_axes=(0, None, None, None, None))
+    f = jax.vmap(f, in_axes=(0, 0, 0, 0, 0))
+    f = jax.vmap(f, in_axes=(0, 0, 0, 0, 0))
+    qg = jnp.moveaxis(q.reshape(B, S, Hkv, rep, hd), 1, 3)   # B,Hkv,rep,S,hd
+    km = jnp.moveaxis(k_mant, 1, 2)                          # B,Hkv,S,hd
+    ke = jnp.moveaxis(k_exp, 1, 2)
+    vm = jnp.moveaxis(v_mant, 1, 2)
+    ve = jnp.moveaxis(v_exp, 1, 2)                           # B,Hkv,S/32,hd
+    o = f(qg, km, ke, vm, ve)                                # B,Hkv,rep,S,hd
+    return jnp.moveaxis(o, 3, 1).reshape(B, S, H, hd)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def bfp_attention_decode_bulk(q, k_mant4, k_exp, v_mant4, v_exp, valid_len,
+                              interpret: Optional[bool] = None):
+    """Batched GQA decode over the 4-bit bulk cache region.
+
+    q: (B, H, hd) (one token); k_mant4: (B, S, Hkv, hd/2);
+    k_exp: (B, S, Hkv, hd/32); v_mant4: (B, S/2, Hkv, hd);
+    v_exp: (B, S/32, Hkv, hd); valid_len: () int32.
+    Returns flash triple (o (B,H,hd), m (B,H,1), l (B,H,1))."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, H, hd = q.shape
+    Hkv = k_mant4.shape[2]
+    rep = H // Hkv
+    single = partial(bfp_attention_decode_kernel, interpret=interpret)
+    f = jax.vmap(single, in_axes=(0, 0, 0, 0, 0, None))      # kv heads
+    f = jax.vmap(f, in_axes=(0, 0, 0, 0, 0, None))           # batch
+    qg = q.reshape(B, Hkv, rep, hd)
+    km = jnp.moveaxis(k_mant4, 1, 2)
+    ke = jnp.moveaxis(k_exp, 1, 2)
+    vm = jnp.moveaxis(v_mant4, 1, 2)
+    ve = jnp.moveaxis(v_exp, 1, 2)
+    o, m, l = f(qg, km, ke, vm, ve, valid_len)
+    return (o.reshape(B, H, hd), m.reshape(B, H, 1), l.reshape(B, H, 1))
+
+
+__all__ = ["bfp_quantize", "bfp_matmul", "bfp_linear",
+           "bfp_attention_prefill", "bfp_attention_decode_bulk",
+           "quantize_v_token_grouped", "choose_dataflow"]

@@ -1,0 +1,434 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the device-count flag before ANY jax-touching import (jax locks
+the device count on first init), hence the first two lines.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ASSIGNED_ARCHS, SHAPES, get_arch, input_specs)
+from repro.distributed.sharding import (batch_pspec, cache_pspecs,
+                                        opt_pspecs, param_pspecs, to_named)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.models.init import abstract_params
+from repro.quant.int4 import abstract_pack_params
+from repro.train.optimizer import AdamWState
+
+
+# ---------------------------------------------------------------------------
+# Collective-traffic parser (per-chip ICI bytes from the partitioned HLO)
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "f64": 8, "s64": 8,
+                "u64": 8}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\([^)]*\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_RE = re.compile(
+    r"=\s+\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-chip ICI byte estimate per collective kind.
+
+    Ring-model factors on the *result* size r with group size n:
+      all-reduce:        2 r (n-1)/n      all-gather:  r (n-1)/n
+      reduce-scatter:    r (n-1)          all-to-all:  r (n-1)/n
+      collective-permute: r
+    """
+    out = {k: 0.0 for k in ("all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "collective-permute")}
+    counts = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        kind = None
+        size = 0
+        if m and m.group(1):
+            kind = m.group(3)
+            size = _shape_bytes(m.group(1), m.group(2))
+        else:
+            mt = _TUPLE_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                size = sum(_shape_bytes(d, s)
+                           for d, s in _SHAPE_RE.findall(mt.group(1)))
+        if not kind:
+            continue
+        g = _GROUP_RE.search(line)
+        n = len(g.group(1).split(",")) if g else 2
+        if n <= 1:
+            continue
+        f = (n - 1) / n
+        factor = {"all-reduce": 2 * f, "all-gather": f,
+                  "reduce-scatter": (n - 1), "all-to-all": f,
+                  "collective-permute": 1.0}[kind]
+        out[kind] += size * factor
+        counts[kind] += 1
+    out["total_bytes"] = sum(out.values())
+    out["counts"] = counts
+    return out
+
+
+def _tree_bytes_per_device(tree, specs, mesh) -> float:
+    """Analytic per-device bytes of a sharded abstract tree."""
+    total = 0.0
+    for leaf, spec in zip(jax.tree.leaves(tree),
+                          jax.tree.leaves(specs,
+                                          is_leaf=lambda x: isinstance(
+                                              x, jax.sharding.PartitionSpec))):
+        n = leaf.size * jnp.dtype(leaf.dtype).itemsize
+        div = 1
+        for axis in spec:
+            if axis is None:
+                continue
+            for a in (axis if isinstance(axis, tuple) else (axis,)):
+                div *= mesh.shape[a]
+        total += n / div
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def _depth_variant(cfg, n_rep: int):
+    """Same config at reduced scan depth (keeps the true remainder blocks)
+    for the two-point cost extrapolation: XLA cost analysis counts loop
+    bodies once, so cost(n_rep) = a + b*n_rep is measured at n_rep=1,2 and
+    extrapolated to the real depth."""
+    import dataclasses as dc
+    P = len(cfg.block_pattern)
+    rem = cfg.n_layers % P
+    kw = {"n_layers": n_rep * P + rem}
+    if cfg.encoder_layers:
+        n_rep_full = cfg.n_layers // P
+        rate = cfg.encoder_layers / max(n_rep_full, 1)
+        kw["encoder_layers"] = max(1, round(rate * n_rep))
+    return dc.replace(cfg, **kw)
+
+
+def _n_rep(cfg) -> int:
+    return cfg.n_layers // len(cfg.block_pattern)
+
+
+def _build_and_compile(cfg, spec, shape, mesh, specs_in, unroll=False):
+    """Lower + compile one step for ``cfg``; returns (compiled, extras).
+
+    ``unroll``: statically unroll the layer scan + CE chunk loop so XLA
+    cost analysis counts every repetition (used by the shallow depth
+    variants; the full config compiles with scans as the memory /
+    shardability proof)."""
+    aparams = abstract_params(cfg)
+
+    if shape.kind == "train":
+        p_ps = param_pspecs(cfg, aparams, mesh)
+        aopt_like = jax.eval_shape(
+            lambda p: jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), p), aparams)
+        o_ps = opt_pspecs(p_ps, aopt_like, mesh)  # ZeRO-1 moments
+        b_ps = batch_pspec(mesh, shape.global_batch)
+        aopt = jax.eval_shape(
+            lambda p: AdamWState(
+                step=jnp.zeros((), jnp.int32),
+                mu=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+                nu=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)),
+            aparams)
+        dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+        step = make_train_step(cfg, loss_unroll=unroll,
+                               unroll_layers=unroll, seq_shard=True,
+                               dp_axes=dp)
+        args = [aparams, aopt, specs_in["tokens"], specs_in["labels"]]
+        in_sh = [to_named(p_ps, mesh), to_named(o_ps, mesh),
+                 jax.NamedSharding(mesh, b_ps), jax.NamedSharding(mesh, b_ps)]
+        if "frontend_embeds" in specs_in:
+            args.append(specs_in["frontend_embeds"])
+            in_sh.append(jax.NamedSharding(
+                mesh, batch_pspec(mesh, shape.global_batch)))
+        out_sh = (to_named(p_ps, mesh), to_named(o_ps, mesh), None)
+        jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                         out_shardings=out_sh, donate_argnums=(0, 1))
+        state_bytes = (_tree_bytes_per_device(aparams, p_ps, mesh)
+                       + _tree_bytes_per_device(aopt, o_ps, mesh))
+    elif shape.kind == "prefill":
+        apacked = abstract_pack_params(aparams)
+        p_ps = param_pspecs(cfg, apacked, mesh)
+        b_ps = batch_pspec(mesh, shape.global_batch)
+        dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+        step = make_prefill_step(cfg, max_seq=shape.seq_len,
+                                 unroll_layers=unroll, seq_shard=True,
+                                 dp_axes=dp)
+        args = [apacked, specs_in["tokens"]]
+        in_sh = [to_named(p_ps, mesh), jax.NamedSharding(mesh, b_ps)]
+        if "frontend_embeds" in specs_in:
+            args.append(specs_in["frontend_embeds"])
+            in_sh.append(jax.NamedSharding(mesh, b_ps))
+        jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                         out_shardings=None)
+        state_bytes = _tree_bytes_per_device(apacked, p_ps, mesh)
+    else:  # decode
+        from repro.models import lm as lm_mod
+        apacked = abstract_pack_params(aparams)
+        p_ps = param_pspecs(cfg, apacked, mesh)
+        enc_tokens = cfg.encoder_tokens if cfg.is_encoder_decoder else 0
+        acaches = jax.eval_shape(partial(
+            lm_mod.init_decode_caches, cfg, shape.global_batch,
+            shape.seq_len, enc_tokens))
+        c_ps = cache_pspecs(acaches, mesh, shape.global_batch)
+        b_ps = batch_pspec(mesh, shape.global_batch)
+        dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+        step = make_decode_step(cfg, unroll_layers=unroll, seq_shard=True,
+                                dp_axes=dp)
+        args = [apacked, specs_in["token"], acaches]
+        in_sh = [to_named(p_ps, mesh), jax.NamedSharding(mesh, b_ps),
+                 to_named(c_ps, mesh)]
+        jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                         out_shardings=(None, to_named(c_ps, mesh)),
+                         donate_argnums=(2,))
+        state_bytes = (_tree_bytes_per_device(apacked, p_ps, mesh)
+                       + _tree_bytes_per_device(acaches, c_ps, mesh))
+
+    with mesh:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return compiled, state_bytes
+
+
+def _cost_of(compiled) -> dict:
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        out = {"flops": float(cost.get("flops", 0.0) or 0.0),
+               "bytes_accessed": float(cost.get("bytes accessed", 0.0)
+                                       or 0.0)}
+    except Exception as e:
+        out = {"flops": 0.0, "bytes_accessed": 0.0, "error": str(e)}
+    out["collectives"] = parse_collectives(compiled.as_text())
+    return out
+
+
+def _mem_of(compiled) -> dict:
+    try:
+        mem = compiled.memory_analysis()
+        return {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        return {"error": str(e)}
+
+
+def _extrapolate(c1: dict, c2: dict, n_rep: int) -> dict:
+    """cost(n) = a + b*n measured at n=1,2 -> value at n_rep."""
+    def lin(v1, v2):
+        return v2 + (v2 - v1) * (n_rep - 2)
+    out = {"flops": lin(c1["flops"], c2["flops"]),
+           "bytes_accessed": lin(c1["bytes_accessed"],
+                                 c2["bytes_accessed"])}
+    coll = {}
+    for k in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute", "total_bytes"):
+        coll[k] = lin(c1["collectives"][k], c2["collectives"][k])
+    out["collectives"] = coll
+    return out
+
+
+def _attn_pairs(S: int, kind: str, window: int) -> float:
+    """Number of attended (q, k) pairs over a length-S sequence."""
+    if kind == "bidir":
+        return float(S) * S
+    if kind == "local" and 0 < window < S:
+        return window * (window + 1) / 2 + (S - window) * float(window)
+    return S * (S + 1) / 2  # causal
+
+
+def analytic_attention(cfg, shape) -> dict:
+    """Attention flops/bytes for cells running the chunked (flash) path —
+    XLA cost analysis can't see through its scan trip counts.  Counts the
+    *intended* compute (window-limited, causal-halved), matching what the
+    Pallas kernels execute on TPU.  Train factor 4 = fwd + remat-refwd +
+    2x bwd (inner tile recompute excluded, conservative)."""
+    from repro.layers.attention import FLASH_THRESHOLD, FLASH_Q_CHUNK
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode" or S <= FLASH_THRESHOLD \
+            or not any(k in ("attn", "local_attn")
+                       for k in cfg.block_pattern):
+        return {"flops": 0.0, "bytes": 0.0, "engaged": False}
+    factor = 4.0 if shape.kind == "train" else 1.0
+    flops = 0.0
+    kv_bytes = 0.0
+    n_q = S // min(FLASH_Q_CHUNK, S)
+    for kind, n in cfg.kind_counts().items():
+        if kind not in ("attn", "local_attn"):
+            continue
+        mk = "local" if kind == "local_attn" else "causal"
+        pairs = _attn_pairs(S, mk, cfg.window_size if mk == "local" else 0)
+        flops += n * 4.0 * B * cfg.n_heads * pairs * cfg.head_dim
+        # flash streams K,V once per q chunk (bf16 fresh activations)
+        kv_bytes += n * n_q * 2.0 * B * S * cfg.kv_dim * 2
+    return {"flops": flops * factor, "bytes": kv_bytes * factor,
+            "engaged": True}
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
+             verbose: bool = True, skip_full: bool = False) -> dict:
+    """Compile one (arch x shape x mesh) cell.
+
+    Always compiles the FULL config (the shardability proof + memory
+    analysis).  Cost/collective numbers come from the depth-1/2
+    extrapolation because XLA cost analysis counts scan bodies once.
+    ``skip_full``: extrapolation-only (used while iterating on perf)."""
+    spec = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    if shape_name not in spec.applicable_shapes():
+        return {"arch": arch_id, "shape": shape_name,
+                "skipped": spec.skipped_shapes().get(shape_name, "n/a")}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = spec.config
+    specs_in = input_specs(spec, shape)
+    n_rep = _n_rep(cfg)
+
+    t0 = time.time()
+    c1_compiled, _ = _build_and_compile(_depth_variant(cfg, 1), spec, shape,
+                                        mesh, specs_in, unroll=True)
+    c2_compiled, _ = _build_and_compile(_depth_variant(cfg, 2), spec, shape,
+                                        mesh, specs_in, unroll=True)
+    c1, c2 = _cost_of(c1_compiled), _cost_of(c2_compiled)
+    cost_x = _extrapolate(c1, c2, n_rep)
+    t_shallow = time.time() - t0
+
+    # flash-attention cells: add analytic attention terms (per device)
+    n_dev = 1
+    for v in mesh.shape.values():
+        n_dev *= v
+    attn = analytic_attention(cfg, shape)
+    cost_x["attention_analytic_total"] = attn
+    if attn["engaged"]:
+        cost_x["flops"] += attn["flops"] / n_dev
+        cost_x["bytes_accessed"] += attn["bytes"] / n_dev
+
+    mem_stats, cost_full, state_bytes, t_full = {}, {}, None, 0.0
+    if not skip_full:
+        t0 = time.time()
+        compiled, state_bytes = _build_and_compile(cfg, spec, shape, mesh,
+                                                   specs_in)
+        t_full = time.time() - t0
+        mem_stats = _mem_of(compiled)
+        cost_full = _cost_of(compiled)
+
+    result = {
+        "arch": arch_id, "shape": shape_name,
+        "multi_pod": multi_pod, "mesh": dict(mesh.shape),
+        "compile_seconds_full": round(t_full, 1),
+        "compile_seconds_shallow": round(t_shallow, 1),
+        "state_bytes_per_device": state_bytes,
+        "memory_analysis": mem_stats,
+        "cost_analysis": cost_x,           # depth-extrapolated (roofline)
+        "cost_analysis_raw": cost_full,    # scan-undercounted, full config
+        "params_total": spec.config.param_count(),
+        "params_active": spec.config.active_param_count(),
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "kind": shape.kind, "n_rep": n_rep,
+    }
+    if verbose:
+        fl = cost_x["flops"]
+        print(f"[dryrun] {arch_id} x {shape_name} "
+              f"{'multi-pod' if multi_pod else 'single-pod'}: "
+              f"full-compile {t_full:.1f}s shallow {t_shallow:.1f}s, "
+              f"flops/dev {fl:.3e}, "
+              f"state/dev {0 if state_bytes is None else state_bytes/2**30:.2f} GiB, "
+              f"coll {cost_x['collectives']['total_bytes']/2**20:.1f} MiB")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for a in ASSIGNED_ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}.json"
+            try:
+                res = run_cell(arch, shape, multi_pod=mp)
+            except Exception as e:  # keep sweeping; record the bug
+                import traceback
+                res = {"arch": arch, "shape": shape, "multi_pod": mp,
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                failures.append(tag)
+                print(f"[dryrun] FAIL {arch} x {shape} "
+                      f"{'mp' if mp else 'sp'}: {type(e).__name__}: "
+                      f"{str(e)[:200]}", flush=True)
+            with open(os.path.join(args.out, tag), "w") as f:
+                json.dump(res, f, indent=2, default=str)
+            if "skipped" in res:
+                print(f"[dryrun] SKIP {arch} x {shape}: {res['skipped']}",
+                      flush=True)
+            elif "error" not in res:
+                ma = res["memory_analysis"]
+                print(json.dumps({k: ma.get(k) for k in ma}, indent=None),
+                      flush=True)
+                print(json.dumps(res["cost_analysis"]), flush=True)
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES: {failures}")
+    else:
+        print("[dryrun] sweep complete, no failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Step functions: train (fp/bf16 + AdamW), serve prefill, serve decode.
+
+These are the units the dry-run lowers and the drivers execute.  Serving
+steps run the Harmonia configuration: INT4-packed weights + BFP
+activations + the packed asymmetric KV cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant_config import QuantConfig, harmonia
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.lm import head_logits
+from repro.train.optimizer import adamw_update, cosine_schedule
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 1e-4) -> jax.Array:
+    """Mean CE over all positions (fp32), with a small z-loss for
+    stability (standard large-scale practice)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - ll)
+    if z_loss:
+        ce = ce + z_loss * jnp.mean(jnp.square(lse))
+    return ce
+
+
+def chunked_cross_entropy(params, cfg: ModelConfig, h: jax.Array,
+                          labels: jax.Array, chunk: int = 512,
+                          z_loss: float = 1e-4,
+                          unroll: bool = False) -> jax.Array:
+    """CE computed per sequence chunk so the full (B, S, V) logits never
+    materialize (vocab up to 256k x 1M tokens would be ~TBs).  Each chunk
+    recomputes its logits in the backward pass (jax.checkpoint).
+
+    ``unroll``: statically unroll the chunk loop — used by the dry-run so
+    XLA cost analysis counts every chunk (it counts loop bodies once)."""
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S  # fall back (small eval shapes)
+    n = S // chunk
+    hc = h.reshape(B, n, chunk, d).swapaxes(0, 1)        # (n, B, chunk, d)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h_c, l_c = xs
+        logits = head_logits(params, cfg, h_c).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        ce = jnp.sum(lse - ll)
+        z = jnp.sum(jnp.square(lse))
+        return (carry[0] + ce, carry[1] + z), None
+
+    (ce_sum, z_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc), unroll=n if unroll else 1)
+    total = B * S
+    return ce_sum / total + z_loss * z_sum / total
+
+
+def make_train_step(cfg: ModelConfig, *, base_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10000,
+                    remat: bool = True, loss_chunk: int = 512,
+                    loss_unroll: bool = False, unroll_layers: bool = False,
+                    seq_shard: bool = False, dp_axes: tuple = ("data",),
+                    grad_compression: Optional[str] = None,
+                    quant: Optional[QuantConfig] = None):
+    """Returns train_step(params, opt_state, tokens, labels
+    [, frontend_embeds]) -> (params, opt_state, metrics).
+
+    ``grad_compression``: None | "int8_ef" (error-feedback int8 — the
+    compressor state is threaded explicitly by the trainer; the step
+    stays pure)."""
+    del grad_compression  # applied by the trainer wrapper (see train.py)
+
+    def train_step(params, opt_state, tokens, labels, frontend_embeds=None):
+        def loss_fn(p):
+            h = lm.forward(p, cfg, tokens, quant=quant,
+                           frontend_embeds=frontend_embeds,
+                           remat=remat, return_hidden=True,
+                           unroll=unroll_layers, seq_shard=seq_shard,
+                           dp_axes=dp_axes)
+            n_lbl = labels.shape[1]
+            return chunked_cross_entropy(p, cfg, h[:, :n_lbl], labels,
+                                         chunk=loss_chunk,
+                                         unroll=loss_unroll)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        lr = cosine_schedule(opt_state.step, base_lr=base_lr,
+                             warmup=warmup, total=total_steps)
+        new_params, new_opt = adamw_update(grads, opt_state, params, lr=lr)
+        metrics = {"loss": loss, "lr": lr,
+                   "step": opt_state.step.astype(jnp.float32)}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, quant: Optional[QuantConfig] = None,
+                   eval_kv: bool = True):
+    """Teacher-forced eval: returns mean CE (for PPL benchmarks)."""
+    def eval_step(params, tokens, labels, frontend_embeds=None):
+        logits = lm.forward(params, cfg, tokens, quant=quant,
+                            eval_kv=eval_kv,
+                            frontend_embeds=frontend_embeds)
+        n_lbl = labels.shape[1]
+        return cross_entropy(logits[:, :n_lbl], labels, z_loss=0.0)
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int,
+                      quant: Optional[QuantConfig] = None,
+                      unroll_layers: bool = False,
+                      seq_shard: bool = False, dp_axes: tuple = ("data",)):
+    """Serving prefill: packed-INT4 params, BFP fresh activations,
+    builds the packed asymmetric cache."""
+    quant = harmonia(4) if quant is None else quant
+
+    def prefill_step(params, tokens, frontend_embeds=None):
+        logits, caches = lm.prefill(params, cfg, tokens, max_seq=max_seq,
+                                    quant=quant,
+                                    frontend_embeds=frontend_embeds,
+                                    unroll=unroll_layers,
+                                    seq_shard=seq_shard, dp_axes=dp_axes)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig,
+                     quant: Optional[QuantConfig] = None,
+                     unroll_layers: bool = False,
+                     seq_shard: bool = False, dp_axes: tuple = ("data",)):
+    """Serving decode: one token for the whole batch against the packed
+    asymmetric cache (+ recurrent states for SSM/RG-LRU blocks)."""
+    quant = harmonia(4) if quant is None else quant
+
+    def decode_step(params, token, caches, pad_prefix=None):
+        logits, new_caches = lm.decode_step(params, cfg, token, caches,
+                                            quant=quant,
+                                            pad_prefix=pad_prefix,
+                                            unroll=unroll_layers,
+                                            seq_shard=seq_shard,
+                                            dp_axes=dp_axes)
+        return logits, new_caches
+
+    return decode_step
+
+
+__all__ = ["cross_entropy", "make_train_step", "make_eval_step",
+           "make_prefill_step", "make_decode_step"]

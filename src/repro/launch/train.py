@@ -1,0 +1,59 @@
+"""Training driver CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch <id> [--smoke] \
+      --steps 200 --batch 8 --seq 256 [--grad-compression int8_ef]
+
+Runs the fault-tolerant trainer (auto-resume from --ckpt-dir).  For the
+production mesh this binary would be launched once per host by the pod
+controller; data sharding is rank-aware (see repro.data.pipeline).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="harmonia-llama3.1-8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the arch's reduced smoke config")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", default=None,
+                    choices=[None, "int8_ef"])
+    ap.add_argument("--d-model", type=int, default=None,
+                    help="override width (e.g. ~100M-param example)")
+    ap.add_argument("--layers", type=int, default=None)
+    args = ap.parse_args()
+
+    from repro.configs import get_arch
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    spec = get_arch(args.arch)
+    cfg = spec.smoke if args.smoke else spec.config
+    overrides = {}
+    if args.d_model:
+        overrides["d_model"] = args.d_model
+    if args.layers:
+        overrides["n_layers"] = args.layers
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    tcfg = TrainerConfig(
+        total_steps=args.steps, batch_size=args.batch, seq_len=args.seq,
+        base_lr=args.lr, checkpoint_dir=args.ckpt_dir,
+        checkpoint_every=args.ckpt_every,
+        grad_compression=args.grad_compression)
+    result = Trainer(cfg, tcfg).run()
+    losses = result["losses"]
+    print(f"[train] done: {len(losses)} updates, "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

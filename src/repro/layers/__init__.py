@@ -1,0 +1,1 @@
+"""Neural-net layers with Harmonia BFP quantization hooks."""

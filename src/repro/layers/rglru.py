@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrence: a_t = a^(c * r_t) with a = sigmoid(Lambda),
+            h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with input gate i_t and recurrence gate r_t computed from x_t via
+block-diagonal projections (n_blocks heads, as in Griffin).
+
+Train/prefill uses an associative scan over the linear recurrence;
+decode is a single elementwise step — O(1) state, so the paper's KV-cache
+compression is inapplicable here (DESIGN.md §Arch-applicability).  The
+in/out/gate projections are BFP-INT GEMMs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant_config import QuantConfig
+from repro.layers.common import qlinear
+
+C_FACTOR = 8.0
+CONV_WIDTH = 4
+
+
+class RglruState(NamedTuple):
+    conv: jax.Array  # (B, CONV_WIDTH-1, w)
+    h: jax.Array     # (B, w) fp32
+
+
+def _block_diag_proj(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (..., W), w: (n_blocks, W/n_blocks, W/n_blocks)."""
+    nb, bs, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (nb, bs))
+    y = jnp.einsum("...nb,nbc->...nc", xs, w.astype(x.dtype))
+    return y.reshape(x.shape)
+
+
+def _gates(xc: jax.Array, p: dict):
+    r = jax.nn.sigmoid(_block_diag_proj(xc, p["w_a"]).astype(jnp.float32)
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag_proj(xc, p["w_x"]).astype(jnp.float32)
+                       + p["b_x"].astype(jnp.float32))
+    a = jax.nn.sigmoid(p["lam"].astype(jnp.float32))
+    log_a = C_FACTOR * r * jnp.log(a)[None]       # log(a_t), broadcast
+    a_t = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a_t), 1e-12)) \
+        * (i * xc.astype(jnp.float32))
+    return a_t, gated_x
+
+
+def _causal_conv(x, w, cache=None):
+    B, S, C = x.shape
+    if cache is None:
+        cache = jnp.zeros((B, CONV_WIDTH - 1, C), x.dtype)
+    xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + S] * w[CONV_WIDTH - 1 - i].astype(x.dtype)
+            for i in range(CONV_WIDTH))
+    return y, xp[:, -(CONV_WIDTH - 1):]
+
+
+def rglru_mixer(hid: jax.Array, p: dict, cfg,
+                quant: Optional[QuantConfig],
+                state: Optional[RglruState] = None, decode: bool = False
+                ) -> Tuple[jax.Array, Optional[RglruState]]:
+    """Griffin recurrent block.
+
+    p: w_in_x (d, w), w_in_gate (d, w), conv_w (4, w),
+       w_a / w_x (nb, bs, bs), b_a / b_x (w,), lam (w,), w_out (w, d).
+    """
+    x_br = qlinear(hid, p["w_in_x"], quant)
+    g_br = jax.nn.gelu(qlinear(hid, p["w_in_gate"], quant))
+
+    if decode:
+        prev = state.conv
+        xin = x_br[:, 0]
+        xp = jnp.concatenate([prev.astype(xin.dtype), xin[:, None]], axis=1)
+        xc = sum(xp[:, i]
+                 * p["conv_w"][CONV_WIDTH - 1 - i].astype(xin.dtype)
+                 for i in range(CONV_WIDTH))
+        new_conv = xp[:, 1:]
+        a_t, gated_x = _gates(xc, p)
+        h_new = a_t * state.h + gated_x
+        y = h_new[:, None].astype(hid.dtype)
+        new_state = RglruState(conv=new_conv, h=h_new)
+    else:
+        conv0 = state.conv if state is not None else None
+        xc, new_conv = _causal_conv(x_br, p["conv_w"], conv0)
+        a_t, gated_x = _gates(xc, p)
+        h0 = state.h if state is not None else jnp.zeros(
+            (hid.shape[0], xc.shape[-1]), jnp.float32)
+        # fold h0 into the first step: h_1 = a_1 h0 + b_1
+        gated_x = gated_x.at[:, 0].add(a_t[:, 0] * h0)
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        a_s, h_s = jax.lax.associative_scan(combine, (a_t, gated_x), axis=1)
+        y = h_s.astype(hid.dtype)
+        new_state = RglruState(conv=new_conv, h=h_s[:, -1])
+
+    out = qlinear(y * g_br.astype(y.dtype), p["w_out"], quant)
+    return out, new_state
+
+
+def init_rglru_state(batch: int, cfg, dtype=jnp.float32) -> RglruState:
+    return RglruState(
+        conv=jnp.zeros((batch, CONV_WIDTH - 1, cfg.lru_width), dtype),
+        h=jnp.zeros((batch, cfg.lru_width), jnp.float32))
+
+
+__all__ = ["RglruState", "rglru_mixer", "init_rglru_state"]

@@ -1,0 +1,38 @@
+"""Rotary and sinusoidal position embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin = jnp.sin(ang)[..., None, :]                   # (..., S, 1, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions: jax.Array, d_model: int,
+                         max_timescale: float = 10000.0) -> jax.Array:
+    """Additive sin/cos embedding (Whisper-style), any length."""
+    half = d_model // 2
+    inv = jnp.exp(-jnp.log(max_timescale) * jnp.arange(half,
+                                                       dtype=jnp.float32)
+                  / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+__all__ = ["rope_freqs", "apply_rope", "sinusoidal_embedding"]

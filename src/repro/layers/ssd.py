@@ -1,0 +1,216 @@
+"""Mamba-2 SSD (state-space duality) mixer.
+
+Chunked train/prefill path (the SSD block-decomposition from the Mamba-2
+paper: intra-chunk "attention-like" term + inter-chunk state recurrence)
+and a single-step decode path carrying (conv_state, ssm_state).
+
+Harmonia applicability: the in/out projections are BFP-INT GEMMs (M8W4);
+the selective-scan itself is elementwise fp32 on an O(1) state — there is
+no KV cache to compress (documented in DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant_config import QuantConfig
+from repro.layers.common import qlinear, rms_norm
+
+CONV_WIDTH = 4
+
+
+class SsdState(NamedTuple):
+    conv: jax.Array   # (B, CONV_WIDTH-1, conv_dim) trailing inputs
+    ssm: jax.Array    # (B, H, P, N) recurrent state
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, cache: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv, width 4.  x: (B,S,C), w: (4,C).
+
+    Returns (y, new_cache) with cache = last 3 inputs."""
+    B, S, C = x.shape
+    if cache is None:
+        cache = jnp.zeros((B, CONV_WIDTH - 1, C), x.dtype)
+    xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + S] * w[CONV_WIDTH - 1 - i].astype(x.dtype)
+            for i in range(CONV_WIDTH))
+    return jax.nn.silu(y), xp[:, -(CONV_WIDTH - 1):]
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., t, s] = sum_{s < u <= t} dA[..., u].
+
+    dA: (..., Q) -> (..., Q, Q), lower-triangular valid."""
+    Q = dA.shape[-1]
+    c = jnp.cumsum(dA, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int = 64,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD over a full sequence.
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B,S,H,N) (groups already broadcast to heads).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q != 0:
+        # pad with dt=0 steps: decay exp(0)=1 and zero input — the padded
+        # tail neither changes the final state nor the valid outputs
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, H, N)
+    Cc = Cm.reshape(Bsz, nc, Q, H, N)
+    dA = dtc * A[None, None, None]                     # (B,nc,Q,H)
+    dAh = jnp.moveaxis(dA, -1, 2)                      # (B,nc,H,Q)
+
+    # intra-chunk (diagonal blocks): attention-like with decay kernel
+    Lmat = jnp.exp(_segsum(dAh))                       # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", Cc, Bc)  # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bchqs,bcsh,bcshp->bcqhp", scores * Lmat, dtc, xc)
+
+    # chunk-final states: S_c = sum_s exp(sum_{u>s} dA_u) dt_s B_s x_s^T
+    decay_to_end = jnp.exp(jnp.cumsum(dAh[..., ::-1], axis=-1)[..., ::-1]
+                           - dAh)                       # (B,nc,H,Q)
+    states = jnp.einsum("bchq,bcqh,bcqhn,bcqhp->bchpn",
+                        decay_to_end, dtc, Bc, xc)      # (B,nc,H,P,N)
+
+    # inter-chunk recurrence: H_c = exp(sum dA_c) H_{c-1} + S_c
+    chunk_decay = jnp.exp(jnp.sum(dAh, axis=-1))        # (B,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        cd, s = inp
+        h_new = cd[..., None, None] * h + s
+        return h_new, h
+    (h_final, h_prev) = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(states, 1, 0).astype(jnp.float32)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                 # (B,nc,H,P,N)
+
+    # off-diagonal contribution: y_off[t] = C_t · H_{c-1} * exp(cum dA to t)
+    in_decay = jnp.exp(jnp.cumsum(dAh, axis=-1))        # (B,nc,H,Q)
+    y_off = jnp.einsum("bcqhn,bchpn,bchq->bcqhp", Cc, h_prev, in_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)[:, :S_orig]
+    return y, h_final
+
+
+def ssd_decode_step(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array,
+                    h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One token: x (B,H,P), dt (B,H), Bm/Cm (B,H,N), h (B,H,P,N)."""
+    a = jnp.exp(dt * A[None])                           # (B,H)
+    h_new = (a[..., None, None] * h
+             + jnp.einsum("bh,bhn,bhp->bhpn", dt, Bm, x))
+    y = jnp.einsum("bhn,bhpn->bhp", Cm, h_new)
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# Full mixer (projections + conv + SSD + gate + out)
+# ---------------------------------------------------------------------------
+
+def ssd_mixer(h: jax.Array, p: dict, cfg, quant: Optional[QuantConfig],
+              state: Optional[SsdState] = None, decode: bool = False
+              ) -> Tuple[jax.Array, Optional[SsdState]]:
+    """Mamba-2 block mixer.
+
+    p: w_in (d, 2*di + 2*N + H), conv_w (4, di + 2*N), A_log (H,), D (H,),
+       dt_bias (H,), norm (di,), w_out (di, d).
+    cfg needs: ssm_heads H, ssm_state N, d_model, ssm_inner di.
+    """
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    di = cfg.ssm_inner
+    P = di // H
+
+    zxbcdt = qlinear(h, p["w_in"], quant)
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * N * cfg.ssm_groups],
+                           axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if decode:
+        # h: (B, 1, d) -> squeeze token dim for the step
+        conv_in = xbc[:, 0]
+        prev = state.conv
+        xp = jnp.concatenate([prev.astype(conv_in.dtype),
+                              conv_in[:, None]], axis=1)  # (B,4,C)
+        y_conv = sum(xp[:, i]
+                     * p["conv_w"][CONV_WIDTH - 1 - i].astype(conv_in.dtype)
+                     for i in range(CONV_WIDTH))
+        y_conv = jax.nn.silu(y_conv)
+        new_conv = xp[:, 1:]
+        x_s, B_s, C_s = jnp.split(y_conv, [di, di + N * cfg.ssm_groups],
+                                  axis=-1)
+        x_s = x_s.reshape(-1, H, P).astype(jnp.float32)
+        B_s = _bcast_groups(B_s, cfg).astype(jnp.float32)
+        C_s = _bcast_groups(C_s, cfg).astype(jnp.float32)
+        y, h_new = ssd_decode_step(x_s, dt[:, 0], A, B_s, C_s, state.ssm)
+        y = y + p["D"].astype(jnp.float32)[None, :, None] * x_s
+        y = y.reshape(-1, 1, di)
+        new_state = SsdState(conv=new_conv, ssm=h_new)
+    else:
+        conv0 = state.conv if state is not None else None
+        y_conv, new_conv = _causal_conv(xbc, p["conv_w"], conv0)
+        x_s, B_s, C_s = jnp.split(y_conv, [di, di + N * cfg.ssm_groups],
+                                  axis=-1)
+        Bsz, S = x_s.shape[:2]
+        x_s = x_s.reshape(Bsz, S, H, P).astype(jnp.float32)
+        B_s = _bcast_groups(B_s, cfg).astype(jnp.float32)
+        C_s = _bcast_groups(C_s, cfg).astype(jnp.float32)
+        h0 = state.ssm if state is not None else None
+        y, h_fin = ssd_chunked(x_s, dt, A, B_s, C_s,
+                               chunk=min(64, S), h0=h0)
+        y = y + p["D"].astype(jnp.float32)[None, None, :, None] * x_s
+        y = y.reshape(Bsz, S, di)
+        new_state = SsdState(conv=new_conv, ssm=h_fin)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(h.dtype), p["norm"], cfg.norm_eps)
+    out = qlinear(y, p["w_out"], quant)
+    return out, new_state
+
+
+def _bcast_groups(bc: jax.Array, cfg) -> jax.Array:
+    """(.., G*N) -> (.., H, N) broadcasting SSM groups to heads."""
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    shp = bc.shape[:-1] + (G, N)
+    bc = bc.reshape(shp)
+    rep = H // G
+    return jnp.repeat(bc, rep, axis=-2)
+
+
+def init_ssd_state(batch: int, cfg, dtype=jnp.float32) -> SsdState:
+    di = cfg.ssm_inner
+    conv_dim = di + 2 * cfg.ssm_state * cfg.ssm_groups
+    return SsdState(
+        conv=jnp.zeros((batch, CONV_WIDTH - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, cfg.ssm_heads, di // cfg.ssm_heads,
+                       cfg.ssm_state), jnp.float32))
+
+
+__all__ = ["SsdState", "ssd_mixer", "ssd_chunked", "ssd_decode_step",
+           "init_ssd_state", "CONV_WIDTH"]

@@ -1,0 +1,1 @@
+"""Unified model definitions (decoder LM, enc-dec, VLM/audio stubs)."""

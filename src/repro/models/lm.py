@@ -1,0 +1,505 @@
+"""Unified LM: forward (train/eval), prefill and decode over any
+ModelConfig — dense GQA, MoE, Mamba-2 SSD, RG-LRU hybrid, enc-dec, VLM.
+
+Layer stacks run under ``jax.lax.scan`` over pattern repeats (params
+stacked per block *kind*), keeping compiled HLO size O(1) in depth.
+Remainder blocks (pattern not dividing n_layers, e.g. recurrentgemma's
+38 = 12x(r,r,a)+2r) run unrolled after the scan.
+
+All GEMMs go through the Harmonia quantization hooks (BFP activations +
+INT4 weights); attention uses the paper's all-layer BFP sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvcache
+from repro.core.quant_config import QuantConfig
+from repro.core.smoothing import compute_online_offsets
+from repro.layers import attention as attn_lib
+from repro.layers import rglru as rglru_lib
+from repro.layers import ssd as ssd_lib
+from repro.layers.common import (embed_lookup, layer_norm, qlinear, rms_norm,
+                                 softcap)
+from repro.layers.mlp import gated_mlp, moe_block, plain_mlp
+from repro.layers.rope import apply_rope, sinusoidal_embedding
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Static + traced context threaded through block application."""
+    mode: str                      # full | prefill | decode
+    positions: Any                 # (B,S) int32 query positions
+    bidir: bool = False            # encoder stacks
+    eval_kv: bool = False          # decode-faithful asymmetric fake-quant
+    enc_out: Any = None            # (B,T,d) encoder output (whisper)
+    enc_positions: Any = None
+    k_valid: Any = None            # (B,S) padding mask
+    max_seq: int = 0               # cache capacity (prefill/decode)
+    pad_prefix: Any = None         # (B,) left-pad counts for decode masks
+    seq_shard: bool = False        # Megatron-SP-style constraints (dry-run
+    dp_axes: tuple = ("data",)     # + production meshes only)
+
+
+def _c(x, ctx: Ctx, *spec):
+    """with_sharding_constraint under the active mesh (no-op unless
+    ctx.seq_shard — tests/single-device paths never hit it)."""
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _norm(h, p, name, cfg: ModelConfig):
+    if cfg.norm_type == "layer":
+        return layer_norm(h, p[name], p[name + "_bias"], cfg.norm_eps)
+    return rms_norm(h, p[name], cfg.norm_eps, cfg.zero_centered_norm)
+
+
+def _mlp_part(h, p, cfg: ModelConfig, quant):
+    x = _norm(h, p, "ln2", cfg)
+    if cfg.n_experts:
+        y = moe_block(x, p, cfg.act_fn, cfg.n_experts, cfg.moe_top_k,
+                      quant, cfg.capacity_factor)
+    elif cfg.mlp_style == "gated":
+        y = gated_mlp(x, p, cfg.act_fn, quant)
+    else:
+        y = plain_mlp(x, p, cfg.act_fn, quant)
+    if cfg.post_block_norm:
+        y = _norm(y, p, "post_ln2", cfg)
+    return h + y
+
+
+def _qkv(x, p, cfg: ModelConfig, quant, prefix=""):
+    B, S, _ = x.shape
+    q = qlinear(x, p[prefix + "wq" if prefix else "wq"], quant,
+                bias=p.get("bq") if not prefix else None)
+    k = qlinear(x, p[prefix + "wk" if prefix else "wk"], quant,
+                bias=p.get("bk") if not prefix else None)
+    v = qlinear(x, p[prefix + "wv" if prefix else "wv"], quant,
+                bias=p.get("bv") if not prefix else None)
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _cross_attention(h, p, cfg: ModelConfig, quant, ctx: Ctx,
+                     enc_kv=None):
+    """Whisper cross-attn; enc_kv = precomputed (k,v) during decode."""
+    x = _norm(h, p, "ln_x", cfg)
+    B, S, _ = x.shape
+    q = qlinear(x, p["wq_x"], quant).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    if enc_kv is None:
+        e = ctx.enc_out
+        Te = e.shape[1]
+        k = qlinear(e, p["wk_x"], quant).reshape(B, Te, cfg.n_kv_heads,
+                                                 cfg.head_dim)
+        v = qlinear(e, p["wv_x"], quant).reshape(B, Te, cfg.n_kv_heads,
+                                                 cfg.head_dim)
+    else:
+        k, v = enc_kv
+        Te = k.shape[1]
+    kpos = jnp.broadcast_to(jnp.arange(Te)[None], (B, Te))
+    out = attn_lib.attention_forward(
+        q, k, v, positions=jnp.zeros((B, S), jnp.int32), mask_kind="bidir",
+        quant=quant, kq_positions=kpos)
+    out = qlinear(out.astype(h.dtype).reshape(B, S, cfg.q_dim), p["wo_x"],
+                  quant)
+    return h + out, (k, v)
+
+
+def _attn_block(h, p, kind: str, cfg: ModelConfig,
+                quant: Optional[QuantConfig], ctx: Ctx, cache):
+    B, S, _ = h.shape
+    x = _norm(h, p, "ln1", cfg)
+    q, k, v = _qkv(x, p, cfg, quant)
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, ctx.positions, cfg.rope_theta)
+        k = apply_rope(k, ctx.positions, cfg.rope_theta)
+    if ctx.seq_shard and ctx.mode in ("full", "prefill"):
+        # heads (e.g. qwen's 40) need not divide the model axis: shard the
+        # query *sequence* instead and gather K/V — kills the partial-sum
+        # (B,H,S,hd) f32 all-reduce in attention bwd (§Perf iteration 2)
+        q = _c(q, ctx, ctx.dp_axes, "model", None, None)
+        k = _c(k, ctx, ctx.dp_axes, None, None, None)
+        v = _c(v, ctx, ctx.dp_axes, None, None, None)
+    window = cfg.window_size if kind == "local_attn" else 0
+    mask_kind = "bidir" if ctx.bidir else (
+        "local" if kind == "local_attn" else "causal")
+    online = (quant is not None and quant.enabled and quant.quant_attention
+              and quant.smoothing.online)
+    new_cache = cache
+
+    if ctx.mode == "full":
+        if online:
+            w = min(quant.smoothing.online_window, S)
+            off = compute_online_offsets(k[:, :w].astype(jnp.float32),
+                                         quant.smoothing.online_topk)
+            k = k - off[:, None].astype(k.dtype)
+        if ctx.eval_kv and quant is not None and quant.enabled \
+                and quant.quant_attention:
+            attn = attn_lib.attention_eval_quant(
+                q, k, v, ctx.positions, quant, mask_kind=mask_kind,
+                window=window, logit_cap=cfg.attn_logit_softcap,
+                k_valid=ctx.k_valid)
+        else:
+            attn = attn_lib.attention_forward(
+                q, k, v, ctx.positions, mask_kind=mask_kind, window=window,
+                logit_cap=cfg.attn_logit_softcap, quant=quant,
+                k_valid=ctx.k_valid)
+    elif ctx.mode == "prefill":
+        attn = attn_lib.attention_forward(
+            q, k, v, ctx.positions, mask_kind=mask_kind, window=window,
+            logit_cap=cfg.attn_logit_softcap, quant=quant,
+            k_valid=ctx.k_valid)
+        if kind == "attn":
+            off = None
+            if online:
+                w = min(quant.smoothing.online_window, S)
+                off = compute_online_offsets(
+                    k[:, :w].astype(jnp.float32),
+                    quant.smoothing.online_topk)
+            c = kvcache.init_cache(B, cfg.n_kv_heads, cfg.head_dim,
+                                   ctx.max_seq)
+            new_cache = kvcache.prefill_cache(
+                c, k.astype(jnp.float32), v.astype(jnp.float32), off)
+        else:
+            c = attn_lib.init_ring_cache(B, cfg.n_kv_heads, cfg.head_dim,
+                                         min(cfg.window_size, ctx.max_seq))
+            new_cache = attn_lib.ring_prefill(
+                c, k.astype(jnp.float32), v.astype(jnp.float32))
+    elif ctx.mode == "decode":
+        if kind == "attn":
+            new_cache = kvcache.append_token(cache, k[:, 0], v[:, 0])
+            attn = attn_lib.attention_decode_packed(
+                q, new_cache, logit_cap=cfg.attn_logit_softcap, quant=quant,
+                extra_invalid_prefix=ctx.pad_prefix,
+                seq_shard=ctx.seq_shard, dp_axes=ctx.dp_axes)
+        else:
+            new_cache = attn_lib.ring_append(cache, k[:, 0], v[:, 0])
+            attn = attn_lib.ring_decode_attention(
+                q, new_cache, window=cfg.window_size,
+                logit_cap=cfg.attn_logit_softcap, quant=quant)
+    else:
+        raise ValueError(ctx.mode)
+
+    attn = attn.astype(h.dtype).reshape(B, S, cfg.q_dim)
+    if ctx.seq_shard and ctx.mode in ("full", "prefill"):
+        attn = _c(attn, ctx, ctx.dp_axes, "model", None)
+    out = qlinear(attn, p["wo"], quant)
+    if cfg.post_block_norm:
+        out = _norm(out, p, "post_ln1", cfg)
+    h = h + out
+    if ctx.seq_shard and ctx.mode in ("full", "prefill"):
+        # Megatron-SP residual: S-sharded between blocks -> row-sharded
+        # projections reduce-scatter instead of all-reduce; norms shard
+        h = _c(h, ctx, ctx.dp_axes, "model", None)
+    return h, new_cache
+
+
+def _wrap_cross(h, p, cfg, quant, ctx: Ctx, cache):
+    """Self-attn (+cache) then cross-attn for enc-dec decoders."""
+    if not cfg.cross_attention:
+        return None
+    self_cache = cache["self"] if isinstance(cache, dict) else None
+    h, new_self = _attn_block(h, p, "attn", cfg, quant, ctx, self_cache)
+    enc_kv = None
+    if isinstance(cache, dict) and "enc_k" in cache and ctx.mode == "decode":
+        enc_kv = (cache["enc_k"], cache["enc_v"])
+    h, (ek, ev) = _cross_attention(h, p, cfg, quant, ctx, enc_kv)
+    if not cfg.mixer_only:
+        h = _mlp_part(h, p, cfg, quant)
+    if ctx.mode in ("prefill", "decode"):
+        new_cache = {"self": new_self, "enc_k": ek.astype(jnp.float32),
+                     "enc_v": ev.astype(jnp.float32)}
+    else:
+        new_cache = cache
+    return h, new_cache
+
+
+def apply_block(h, p, kind: str, cfg: ModelConfig,
+                quant: Optional[QuantConfig], ctx: Ctx, cache=None):
+    if kind in ("attn", "local_attn"):
+        if cfg.cross_attention and not ctx.bidir:
+            return _wrap_cross(h, p, cfg, quant, ctx, cache)
+        h, new_cache = _attn_block(h, p, kind, cfg, quant, ctx, cache)
+        if not cfg.mixer_only:
+            h = _mlp_part(h, p, cfg, quant)
+        return h, new_cache
+    if kind == "ssd":
+        x = _norm(h, p, "ln1", cfg)
+        y, new_state = ssd_lib.ssd_mixer(x, p, cfg, quant, state=cache,
+                                         decode=(ctx.mode == "decode"))
+        return h + y, new_state
+    if kind == "rglru":
+        x = _norm(h, p, "ln1", cfg)
+        y, new_state = rglru_lib.rglru_mixer(x, p, cfg, quant, state=cache,
+                                             decode=(ctx.mode == "decode"))
+        h = h + y
+        if not cfg.mixer_only:
+            h = _mlp_part(h, p, cfg, quant)
+        return h, new_state
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Stack execution: scan over pattern repeats + unrolled remainder
+# ---------------------------------------------------------------------------
+
+def _split_stacks(cfg: ModelConfig, blocks: Dict):
+    """Per-kind stacked trees -> (scan view (n_rep, c_k, ...), remainder)."""
+    n_rep, rem = cfg.pattern_layout()
+    c = {}
+    for k in cfg.block_pattern:
+        c[k] = c.get(k, 0) + 1
+    scan_view, rem_view = {}, []
+    for kind, ck in c.items():
+        tree = blocks[kind]
+        scan_view[kind] = jax.tree.map(
+            lambda a: a[: n_rep * ck].reshape((n_rep, ck) + a.shape[1:]),
+            tree)
+    offs = {k: cfg.pattern_layout()[0] * c[k] for k in c}
+    for kind in rem:
+        i = offs[kind]
+        rem_view.append((kind, jax.tree.map(lambda a: a[i], blocks[kind])))
+        offs[kind] += 1
+    return scan_view, rem_view, n_rep, c
+
+
+def _run_stack(h, blocks: Dict, cfg: ModelConfig, quant, ctx: Ctx,
+               caches=None, remat: bool = False, unroll: bool = False):
+    """Returns (h, new_caches) — caches mirror the input structure:
+    {"scan": {kind: (n_rep, c_k, ...)}, "rem": [per-block, ...]}."""
+    scan_params, rem_params, n_rep, c = _split_stacks(cfg, blocks)
+
+    def step(carry, xs):
+        hh = carry
+        idx = {k: 0 for k in c}
+        new_cs: Dict = {k: [] for k in c}
+        for kind in cfg.block_pattern:
+            i = idx[kind]
+            p_i = jax.tree.map(lambda a: a[i], xs[kind][0])
+            c_i = None
+            if xs[kind][1] is not None:
+                c_i = jax.tree.map(lambda a: a[i], xs[kind][1])
+            hh, c_new = apply_block(hh, p_i, kind, cfg, quant, ctx, c_i)
+            new_cs[kind].append(c_new)
+            idx[kind] += 1
+        ys = None
+        if ctx.mode in ("prefill", "decode"):
+            ys = {k: jax.tree.map(lambda *a: jnp.stack(a), *v)
+                  if v[0] is not None else None
+                  for k, v in new_cs.items()}
+        return hh, ys
+
+    step_fn = jax.checkpoint(step) if remat else step
+    xs = {k: (scan_params[k],
+              caches["scan"].get(k) if caches is not None else None)
+          for k in c}
+    h, ys = jax.lax.scan(step_fn, h, xs, unroll=n_rep if unroll else 1)
+
+    rem_caches = []
+    for j, (kind, p_j) in enumerate(rem_params):
+        c_j = caches["rem"][j] if caches is not None else None
+        h, c_new = apply_block(h, p_j, kind, cfg, quant, ctx, c_j)
+        rem_caches.append(c_new)
+
+    new_caches = None
+    if ctx.mode in ("prefill", "decode"):
+        new_caches = {"scan": ys, "rem": rem_caches}
+    return h, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper) + embedding + heads
+# ---------------------------------------------------------------------------
+
+def encoder_forward(params, cfg: ModelConfig, frames: jax.Array,
+                    quant=None, unroll: bool = False) -> jax.Array:
+    """frames: (B, T, d) precomputed conv-frontend embeddings (stub)."""
+    B, T, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    h = frames + sinusoidal_embedding(pos, cfg.d_model).astype(frames.dtype)
+    from repro.models.init import _encoder_view
+    enc_cfg = _encoder_view(cfg)
+    ctx = Ctx(mode="full", positions=pos, bidir=True)
+    blocks = {"attn": params["enc_blocks"]}
+    one = dataclasses.replace(enc_cfg, block_pattern=("attn",),
+                              n_layers=cfg.encoder_layers)
+    h, _ = _run_stack(h, blocks, one, quant, ctx, unroll=unroll)
+    return _norm(h, params, "enc_final_norm", enc_cfg)
+
+
+def _embed(params, cfg: ModelConfig, tokens, positions):
+    import math
+    scale = math.sqrt(cfg.d_model) if cfg.embed_scale else 1.0
+    h = embed_lookup(tokens, params["embed"], scale)
+    if cfg.pos_embed == "sinusoidal":
+        h = h + sinusoidal_embedding(positions, cfg.d_model).astype(h.dtype)
+    return h
+
+
+def head_logits(params, cfg: ModelConfig, h, quant=None):
+    """LM-head projection on already-normalized hidden states."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", h, params["embed"])
+    else:
+        logits = qlinear(h, params["lm_head"], quant)
+    if cfg.final_logit_softcap > 0:
+        logits = softcap(logits, cfg.final_logit_softcap)
+    return logits
+
+
+def _head(params, cfg: ModelConfig, h, quant=None):
+    h = _norm(h, params, "final_norm", cfg)
+    return head_logits(params, cfg, h, quant)
+
+
+def _prepend_frontend(h, positions, frontend_embeds):
+    fe = frontend_embeds.astype(h.dtype)
+    B, n_f, _ = fe.shape
+    h = jnp.concatenate([fe, h], axis=1)
+    pos = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(n_f)[None], (B, n_f)),
+         positions + n_f], axis=1)
+    return h, pos, n_f
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array, *,
+            quant: Optional[QuantConfig] = None,
+            frontend_embeds: Optional[jax.Array] = None,
+            eval_kv: bool = False, positions: Optional[jax.Array] = None,
+            k_valid: Optional[jax.Array] = None,
+            remat: bool = False, return_hidden: bool = False,
+            unroll: bool = False, seq_shard: bool = False,
+            dp_axes: tuple = ("data",)) -> jax.Array:
+    """Full-sequence logits (B, S, V).  ``eval_kv`` turns on the
+    decode-faithful asymmetric KV fake-quant (accuracy benchmarks).
+    ``return_hidden``: skip the LM head and return final hidden states
+    (B, S, d) — used by the chunked-CE training loss so the full
+    (B, S, V) logits never materialize."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = _embed(params, cfg, tokens, positions)
+
+    n_f = 0
+    enc_out = None
+    if cfg.is_encoder_decoder and frontend_embeds is not None:
+        enc_out = encoder_forward(params, cfg, frontend_embeds, quant,
+                                  unroll=unroll)
+    elif cfg.frontend == "vision_stub" and frontend_embeds is not None:
+        h, positions, n_f = _prepend_frontend(h, positions, frontend_embeds)
+
+    ctx = Ctx(mode="full", positions=positions, eval_kv=eval_kv,
+              enc_out=enc_out, k_valid=k_valid, seq_shard=seq_shard,
+              dp_axes=dp_axes)
+    h, _ = _run_stack(h, params["blocks"], cfg, quant, ctx, remat=remat,
+                      unroll=unroll)
+    if return_hidden:
+        h = _norm(h, params, "final_norm", cfg)
+        return h[:, n_f:] if n_f else h
+    logits = _head(params, cfg, h, quant)
+    if n_f:
+        logits = logits[:, n_f:]
+    return logits
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array, *,
+            max_seq: int, quant: Optional[QuantConfig] = None,
+            frontend_embeds: Optional[jax.Array] = None,
+            k_valid: Optional[jax.Array] = None, unroll: bool = False,
+            seq_shard: bool = False, dp_axes: tuple = ("data",)):
+    """Returns (logits_last (B, V), caches)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = _embed(params, cfg, tokens, positions)
+
+    n_f = 0
+    enc_out = None
+    if cfg.is_encoder_decoder and frontend_embeds is not None:
+        enc_out = encoder_forward(params, cfg, frontend_embeds, quant,
+                                  unroll=unroll)
+    elif cfg.frontend == "vision_stub" and frontend_embeds is not None:
+        h, positions, n_f = _prepend_frontend(h, positions, frontend_embeds)
+
+    ctx = Ctx(mode="prefill", positions=positions, enc_out=enc_out,
+              max_seq=max_seq, k_valid=k_valid, seq_shard=seq_shard,
+              dp_axes=dp_axes)
+    h, caches = _run_stack(h, params["blocks"], cfg, quant, ctx,
+                           unroll=unroll)
+    caches["_pos"] = jnp.asarray(h.shape[1], jnp.int32)
+    logits = _head(params, cfg, h[:, -1:], quant)[:, 0]
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, caches, *,
+                quant: Optional[QuantConfig] = None,
+                pad_prefix: Optional[jax.Array] = None,
+                unroll: bool = False, seq_shard: bool = False,
+                dp_axes: tuple = ("data",)):
+    """token: (B,) -> (logits (B, V), new caches)."""
+    B = token.shape[0]
+    t = caches["_pos"]
+    positions = jnp.broadcast_to(t[None, None], (B, 1)).astype(jnp.int32)
+    h = _embed(params, cfg, token[:, None], positions)
+    ctx = Ctx(mode="decode", positions=positions, pad_prefix=pad_prefix,
+              seq_shard=seq_shard, dp_axes=dp_axes)
+    h, new_caches = _run_stack(h, params["blocks"], cfg, quant, ctx, caches,
+                               unroll=unroll)
+    new_caches["_pos"] = t + 1
+    logits = _head(params, cfg, h, quant)[:, 0]
+    return logits, new_caches
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                       enc_tokens: int = 0):
+    """Allocate empty caches in the scan layout (for decode dry-runs and
+    engine cold-starts).  ``enc_tokens``: cross-attn KV length."""
+    n_rep, rem = cfg.pattern_layout()
+
+    def one(kind):
+        if kind == "attn":
+            c = kvcache.init_cache(batch, cfg.n_kv_heads, cfg.head_dim,
+                                   max_seq)
+            if cfg.cross_attention:
+                z = jnp.zeros((batch, enc_tokens, cfg.n_kv_heads,
+                               cfg.head_dim), jnp.float32)
+                return {"self": c, "enc_k": z, "enc_v": z}
+            return c
+        if kind == "local_attn":
+            return attn_lib.init_ring_cache(
+                batch, cfg.n_kv_heads, cfg.head_dim,
+                min(cfg.window_size, max_seq))
+        if kind == "ssd":
+            return ssd_lib.init_ssd_state(batch, cfg)
+        if kind == "rglru":
+            return rglru_lib.init_rglru_state(batch, cfg)
+        raise ValueError(kind)
+
+    c_per = {}
+    for k in cfg.block_pattern:
+        c_per[k] = c_per.get(k, 0) + 1
+    scan = {}
+    for kind, ck in c_per.items():
+        stacked = [jax.tree.map(lambda a: jnp.stack([a] * ck), one(kind))
+                   for _ in range(1)]
+        base = stacked[0]
+        scan[kind] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_rep,) + a.shape), base)
+    rem_caches = [one(kind) for kind in rem]
+    return {"scan": scan, "rem": rem_caches,
+            "_pos": jnp.zeros((), jnp.int32)}
+
+
+__all__ = ["forward", "prefill", "decode_step", "encoder_forward",
+           "init_decode_caches", "Ctx", "apply_block"]

@@ -1,0 +1,1 @@
+"""Analytical accelerator model (the paper's simulator layer)."""

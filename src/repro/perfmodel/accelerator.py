@@ -1,0 +1,210 @@
+"""Analytical accelerator model for Fig. 16-19 (speedup / energy / area).
+
+The paper evaluates with a cycle-accurate simulator built on ANT +
+DNNWeaver over synthesized 28nm PE designs; RTL synthesis is out of scope
+here, so this module rebuilds that layer analytically, calibrated to the
+paper's *published* design points:
+
+  * Harmonia: 3.53 mm^2, 542 mW @ 300 MHz, peak 4534 GOPS/W (M8W4/M8M4),
+    2267 GOPS/W (M8M8); 8x16 PEs x 128 MACs/cycle (M8W4/M8M4) or 64
+    (M8M8).
+  * PE-level relative area/energy efficiency vs baselines (Fig. 17):
+    Harmonia M8W4 is 1.67-4.85x better area-eff / 1.73-4.52x energy-eff
+    than {FP-FP, FP-INT, FIGNA(-C), Anda}.
+  * HBM2: 3.9 pJ/bit access energy, 256 GB/s.
+
+System model per GEMM (M, K, N):
+  compute_time = MACs / (n_lanes * f)
+  ema_bytes    = FDGF-optimal external traffic at the operand bit-widths
+  mem_time     = ema_bytes / BW
+  time         = max(compute_time, mem_time)   (double-buffered)
+  energy       = MACs * e_mac + ema_bytes * e_byte + leakage * time
+
+Baselines route attention GEMMs to an auxiliary FP16 engine (25 % of the
+iso-area budget, as they cannot execute FP-FP work on the quantized PEs);
+Harmonia and the FP-FP engine run everything on one unified array.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+# --- calibration (relative to one FP16-FP16 MAC lane) ---------------------
+# area: relative silicon per MAC lane; energy: relative pJ per MAC.
+# Chosen to reproduce the paper's Fig. 17 ratios.
+PE_TABLE = {
+    #                 area/lane  energy/MAC   native attention?
+    "fp16-fp16":      (1.00,      1.00,       True),
+    "fp16-int4":      (0.62,      0.58,       False),
+    "figna":          (0.48,      0.44,       False),
+    "figna-c":        (0.42,      0.40,       False),
+    "anda-m4":        (0.38,      0.36,       False),
+    "anda-m6":        (0.46,      0.42,       False),
+    "anda-m8":        (0.52,      0.46,       False),
+    "harmonia":       (0.206,     0.221,      True),   # M8W4/M8M4 mode
+}
+HARMONIA_M8M8_FACTOR = 2.0      # M8M8 halves throughput/efficiency
+
+# absolute anchors (Harmonia design point)
+F_CLK = 300e6
+HARMONIA_LANES = 8 * 16 * 128          # PEs x MACs/cycle
+HARMONIA_AREA_MM2 = 3.53
+HARMONIA_POWER_W = 0.542
+FP16_MAC_PJ = 1.3                      # 28nm fp16 MAC+acc energy anchor
+EMA_PJ_PER_BYTE = 3.9 * 8              # HBM2 3.9 pJ/bit
+HBM_BW = 256e9
+AUX_FRACTION = 0.25                    # aux FP16 engine share (baselines)
+
+# storage bits per element (incl. amortized shared exponents / scales)
+BITS = {"fp16": 16.0, "int8": 8.0, "int4": 4.25, "bfp8": 8.16,
+        "bfp6": 6.16, "bfp4": 4.16, "bfp16": 16.16,
+        "kv_harmonia": 4.25 + 0.1}     # asymmetric avg at 2k+ tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class Gemm:
+    m: int
+    k: int
+    n: int
+    kind: str            # "linear" | "attention"
+    a_fmt: str = "bfp8"  # activation storage format
+    b_fmt: str = "int4"  # second-operand storage format
+
+    @property
+    def macs(self) -> float:
+        return float(self.m) * self.k * self.n
+
+
+def _ema_bytes(g: Gemm, tile: int = 128) -> float:
+    """FDGF-optimal external traffic (paper Fig. 15, best of the two
+    dataflows), in bytes at the operand precisions."""
+    a_bits, b_bits = BITS[g.a_fmt], BITS[g.b_fmt]
+    a_bytes = g.m * g.k * a_bits / 8
+    b_bytes = g.k * g.n * b_bits / 8
+    col = b_bytes + (g.n / tile) * a_bytes    # weights resident
+    row = a_bytes + (g.m / tile) * b_bytes    # activations resident
+    out = g.m * g.n * 2.0                     # fp16 results
+    return min(col, row) + out
+
+
+def gemm_time_energy(g: Gemm, engine: str, area_budget_lanes: float
+                     ) -> Tuple[float, float]:
+    """Returns (seconds, joules) for one GEMM on the given engine."""
+    area, e_rel, native_attn = PE_TABLE[engine]
+    lanes = area_budget_lanes / area
+    e_mac = e_rel * FP16_MAC_PJ * 1e-12
+    factor = 1.0
+    if engine == "harmonia" and g.kind == "attention" \
+            and g.a_fmt == "bfp8" and g.b_fmt == "bfp8":
+        factor = HARMONIA_M8M8_FACTOR     # M8M8 mode
+    t_compute = g.macs * factor / (lanes * F_CLK)
+    ema = _ema_bytes(g)
+    t_mem = ema / HBM_BW
+    t = max(t_compute, t_mem)
+    e = g.macs * e_mac * factor + ema * EMA_PJ_PER_BYTE * 1e-12
+    return t, e
+
+
+def run_workload(gemms: List[Gemm], engine: str) -> Dict[str, float]:
+    """Execute a GEMM list; baselines without native attention route
+    attention GEMMs (FP16 x FP16) to the aux FP16 engine that owns
+    AUX_FRACTION of the iso-area budget."""
+    _, _, native_attn = PE_TABLE[engine]
+    unified = native_attn
+    total_lanes = HARMONIA_LANES * PE_TABLE["harmonia"][0]  # area budget
+    t_total = e_total = 0.0
+    for g in gemms:
+        if g.kind == "attention" and not unified:
+            g2 = dataclasses.replace(g, a_fmt="fp16", b_fmt="fp16")
+            t, e = gemm_time_energy(g2, "fp16-fp16",
+                                    total_lanes * AUX_FRACTION)
+        else:
+            lanes = total_lanes * (1.0 if unified else 1 - AUX_FRACTION)
+            if g.kind == "attention" and engine == "fp16-fp16":
+                g = dataclasses.replace(g, a_fmt="fp16", b_fmt="fp16")
+            if engine == "fp16-fp16":
+                g = dataclasses.replace(g, a_fmt="fp16", b_fmt="fp16")
+            t, e = gemm_time_energy(g, engine, lanes)
+        t_total += t
+        e_total += e
+    return {"seconds": t_total, "joules": e_total,
+            "tops": sum(g.macs for g in gemms) * 2 / max(t_total, 1e-30)
+            / 1e12}
+
+
+# ---------------------------------------------------------------------------
+# Workload builders (prefill GEMMs of an LLM block stack)
+# ---------------------------------------------------------------------------
+
+def llm_prefill_gemms(n_layers: int, d_model: int, n_heads: int,
+                      n_kv: int, head_dim: int, d_ff: int, seq: int,
+                      kv_fmt: str = "kv_harmonia",
+                      gated: bool = True) -> List[Gemm]:
+    q_dim, kv_dim = n_heads * head_dim, n_kv * head_dim
+    out: List[Gemm] = []
+    for _ in range(n_layers):
+        out.append(Gemm(seq, d_model, q_dim, "linear"))           # Wq
+        out.append(Gemm(seq, d_model, kv_dim, "linear"))          # Wk
+        out.append(Gemm(seq, d_model, kv_dim, "linear"))          # Wv
+        # attention: QK^T and PV per head (causal ~ S^2/2 each)
+        attn_m = seq
+        attn_k = head_dim
+        attn_n = seq // 2
+        out.append(Gemm(attn_m * n_heads, attn_k, attn_n, "attention",
+                        a_fmt="bfp8", b_fmt=kv_fmt
+                        if kv_fmt in BITS else "bfp4"))
+        out.append(Gemm(attn_m * n_heads, attn_n, attn_k, "attention",
+                        a_fmt="bfp8", b_fmt=kv_fmt
+                        if kv_fmt in BITS else "bfp4"))
+        out.append(Gemm(seq, q_dim, d_model, "linear"))           # Wo
+        n_mlp = 3 if gated else 2
+        for i in range(n_mlp):
+            if i < n_mlp - 1:
+                out.append(Gemm(seq, d_model, d_ff, "linear"))
+            else:
+                out.append(Gemm(seq, d_ff, d_model, "linear"))
+    return out
+
+
+# paper's eight evaluated models (Sec. V-A)
+PAPER_MODELS = {
+    "llama-7b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv=32,
+                     head_dim=128, d_ff=11008),
+    "llama-13b": dict(n_layers=40, d_model=5120, n_heads=40, n_kv=40,
+                      head_dim=128, d_ff=13824),
+    "llama2-7b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv=32,
+                      head_dim=128, d_ff=11008),
+    "llama2-13b": dict(n_layers=40, d_model=5120, n_heads=40, n_kv=40,
+                       head_dim=128, d_ff=13824),
+    "opt-6.7b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv=32,
+                     head_dim=128, d_ff=16384, gated=False),
+    "mistral-7b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv=8,
+                       head_dim=128, d_ff=14336),
+    "llama3.2-1b": dict(n_layers=16, d_model=2048, n_heads=32, n_kv=8,
+                        head_dim=64, d_ff=8192),
+    "llama3.2-3b": dict(n_layers=28, d_model=3072, n_heads=24, n_kv=8,
+                        head_dim=128, d_ff=8192),
+}
+
+ENGINES = ["fp16-fp16", "fp16-int4", "figna", "figna-c", "anda-m8",
+           "harmonia"]
+
+
+def pe_level_table() -> Dict[str, Dict[str, float]]:
+    """Fig. 17 analogue: area/energy efficiency normalized to FP16-FP16."""
+    base_area, base_e, _ = PE_TABLE["fp16-fp16"]
+    out = {}
+    for name, (area, e, _n) in PE_TABLE.items():
+        out[name] = {"area_eff_x": base_area / area,
+                     "energy_eff_x": base_e / e}
+    out["harmonia-m8m8"] = {
+        "area_eff_x": base_area / (PE_TABLE["harmonia"][0]
+                                   * HARMONIA_M8M8_FACTOR),
+        "energy_eff_x": base_e / (PE_TABLE["harmonia"][1]
+                                  * HARMONIA_M8M8_FACTOR)}
+    return out
+
+
+__all__ = ["Gemm", "gemm_time_energy", "run_workload", "llm_prefill_gemms",
+           "PAPER_MODELS", "ENGINES", "PE_TABLE", "pe_level_table",
+           "BITS"]

@@ -1,0 +1,1 @@
+"""Weight quantization (OmniQuant-lite INT4) and smoothing calibration."""

@@ -1,0 +1,108 @@
+"""Offline outlier-smoothing calibration (paper Eq. 3).
+
+Learns per-channel K scales ``S`` (one vector of size n_kv*head_dim per
+attention layer) that minimize the MSE between full-precision outputs and
+outputs computed with BFP-converted activations after applying the
+scaling.  Gradients flow through Convert_BFP via the straight-through
+estimator (``QuantConfig.ste``).
+
+The paper optimizes per transformer block; we optimize all layers jointly
+end-to-end against the model's fp logits — a strictly stronger objective
+that also captures cross-layer error propagation (deviation recorded in
+DESIGN.md).  Scales are parameterized in log space (positivity) and then
+*folded into W_Q / W_K* (Eq. 2), so inference carries zero overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant_config import QuantConfig
+from repro.core.smoothing import fold_offline_scale_params
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.train.optimizer import adam_init, adam_update
+
+
+def _attn_kinds(cfg: ModelConfig):
+    return [k for k in dict.fromkeys(cfg.block_pattern)
+            if k in ("attn", "local_attn")]
+
+
+def _fold_scales(params: Dict, cfg: ModelConfig, log_s: Dict) -> Dict:
+    """Fold exp(log_s) into each attention kind's stacked wq/wk."""
+    new_blocks = dict(params["blocks"])
+    for kind, ls in log_s.items():
+        blk = dict(new_blocks[kind])
+        folded = fold_offline_scale_params(
+            {"wq": blk["wq"].astype(jnp.float32),
+             "wk": blk["wk"].astype(jnp.float32)}, jnp.exp(ls))
+        blk["wq"] = folded["wq"].astype(params["blocks"][kind]["wq"].dtype)
+        blk["wk"] = folded["wk"].astype(params["blocks"][kind]["wk"].dtype)
+        new_blocks[kind] = blk
+    out = dict(params)
+    out["blocks"] = new_blocks
+    return out
+
+
+def calibrate_smoothing(params: Dict, cfg: ModelConfig,
+                        calib_tokens: jax.Array,
+                        quant: QuantConfig,
+                        steps: int = None, lr: float = None,
+                        verbose: bool = False
+                        ) -> Tuple[Dict, Dict, jax.Array]:
+    """Learn and fold offline smoothing scales.
+
+    Returns (folded_params, log_scales, loss_history)."""
+    steps = steps if steps is not None else quant.smoothing.calib_steps
+    lr = lr if lr is not None else quant.smoothing.calib_lr
+    kinds = _attn_kinds(cfg)
+    if not kinds:  # attention-free arch: nothing to smooth
+        return params, {}, jnp.zeros((0,))
+
+    counts = cfg.kind_counts()
+    log_s = {k: jnp.zeros((counts[k], cfg.kv_dim), jnp.float32)
+             for k in kinds}
+
+    target = lm.forward(params, cfg, calib_tokens)  # fp reference
+    target = jax.lax.stop_gradient(target.astype(jnp.float32))
+    q_ste = dataclasses.replace(quant, ste=True)
+
+    def loss_fn(ls):
+        folded = _fold_scales(params, cfg, ls)
+        out = lm.forward(folded, cfg, calib_tokens, quant=q_ste,
+                         eval_kv=True)
+        return jnp.mean(jnp.square(out.astype(jnp.float32) - target))
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    opt = adam_init(log_s)
+    hist = []
+    for i in range(steps):
+        loss, g = grad_fn(log_s)
+        log_s, opt = adam_update(g, opt, log_s, lr)
+        hist.append(float(loss))
+        if verbose and (i % max(steps // 10, 1) == 0 or i == steps - 1):
+            print(f"  calib step {i:4d}  mse={float(loss):.6f}")
+
+    folded = _fold_scales(params, cfg, log_s)
+    return folded, log_s, jnp.asarray(hist)
+
+
+def channel_outlier_stats(k: jax.Array) -> Dict[str, float]:
+    """Diagnostics for Fig. 9/10: channel-wise outlier severity of K.
+
+    k: (B, S, n_kv, hd).  Returns max/median channel magnitude ratio and
+    excess kurtosis across channels."""
+    mag = jnp.max(jnp.abs(k), axis=(0, 1))          # (n_kv, hd)
+    ratio = jnp.max(mag) / jnp.maximum(jnp.median(mag), 1e-9)
+    flat = mag.reshape(-1)
+    mu, sd = jnp.mean(flat), jnp.std(flat) + 1e-9
+    kurt = jnp.mean(((flat - mu) / sd) ** 4) - 3.0
+    return {"max_over_median": float(ratio), "excess_kurtosis": float(kurt)}
+
+
+__all__ = ["calibrate_smoothing", "channel_outlier_stats"]

@@ -1,0 +1,27 @@
+"""Token samplers for the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array, key=None) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(logits: jax.Array, key: jax.Array,
+                temp: float = 0.8) -> jax.Array:
+    return jax.random.categorical(key, logits.astype(jnp.float32) / temp,
+                                  axis=-1).astype(jnp.int32)
+
+
+def top_k(logits: jax.Array, key: jax.Array, k: int = 40,
+          temp: float = 0.8) -> jax.Array:
+    lf = logits.astype(jnp.float32)
+    vals, _ = jax.lax.top_k(lf, k)
+    thresh = vals[..., -1:]
+    lf = jnp.where(lf >= thresh, lf, -jnp.inf)
+    return jax.random.categorical(key, lf / temp, axis=-1).astype(jnp.int32)
+
+
+__all__ = ["greedy", "temperature", "top_k"]

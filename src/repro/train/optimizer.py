@@ -1,0 +1,102 @@
+"""AdamW + schedules, implemented in pure JAX (no optax dependency).
+
+Also hosts the distributed-optimization tricks used by the trainer:
+  * gradient clipping (global norm),
+  * error-feedback int8 gradient compression (see distributed/compression)
+    is applied *around* the all-reduce in the train step, not here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.zeros_like, zeros))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 clip_norm: Optional[float] = 1.0):
+    """Returns (new_params, new_state).  ``lr`` may be scalar or traced."""
+    if clip_norm is not None:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state.step + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+
+    def upd(p, m, v):
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay and p.ndim >= 2:  # decay matrices only
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = (s + 1.0) / max(warmup, 1)  # first step gets a non-zero lr
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(s < warmup, warm, cos)
+
+
+# Simple Adam (no decay/clip) for calibration loops
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: object
+    nu: object
+
+
+def adam_init(params) -> AdamState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamState(jnp.zeros((), jnp.int32), z, jax.tree.map(jnp.zeros_like, z))
+
+
+def adam_update(grads, state: AdamState, params, lr,
+                b1=0.9, b2=0.999, eps=1e-8):
+    step = state.step + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                      state.nu, grads)
+    b1c = 1 - b1 ** step.astype(jnp.float32)
+    b2c = 1 - b2 ** step.astype(jnp.float32)
+    new = jax.tree.map(
+        lambda p, m, v: p - lr * (m / b1c) / (jnp.sqrt(v / b2c) + eps),
+        params, mu, nu)
+    return new, AdamState(step, mu, nu)
+
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "global_norm",
+           "cosine_schedule", "AdamState", "adam_init", "adam_update"]

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# src layout + benchmarks importable; smoke tests must see 1 device
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,110 @@
+"""Core BFP numerics: unit + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bfp
+
+
+def test_quantize_dequantize_roundtrip_matches_fake_quant():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+    fq = bfp.bfp_fake_quant(x, 32, 8)
+    m, e = bfp.bfp_quantize(x, 32, 8)
+    deq = bfp.bfp_dequantize(m, e, 128, 32, 8, axis=-1, ndim=2)
+    assert jnp.allclose(deq, fq)
+
+
+def test_error_bound():
+    """|x - q(x)| <= 2^(E - m + 2) per group (truncation step size)."""
+    rng = np.random.default_rng(1)
+    for m_bits in (4, 6, 8):
+        x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32)) * 10
+        mant, exp = bfp.bfp_quantize(x, 32, m_bits)
+        deq = bfp.bfp_dequantize(mant, exp, 64, 32, m_bits, axis=-1, ndim=2)
+        step = np.exp2(np.asarray(exp, np.float32) - (m_bits - 2))
+        err = np.abs(np.asarray(x - deq)).reshape(4, 2, 32)
+        assert np.all(err <= step[..., None] + 1e-7)
+
+
+def test_zero_group():
+    x = jnp.zeros((2, 32))
+    fq = bfp.bfp_fake_quant(x, 32, 8)
+    assert jnp.all(fq == 0)
+
+
+def test_monotone_in_mantissa_bits():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(16, 96)).astype(np.float32))
+    errs = []
+    for m in (2, 4, 8):
+        errs.append(float(jnp.abs(
+            x - bfp.bfp_fake_quant(x, 32, m)).mean()))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_power_of_two_scale_covariance():
+    """BFP with pow-2 scaling: q(2^k x) == 2^k q(x) (shared exp shifts)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    a = bfp.bfp_fake_quant(x * 4.0, 32, 8)
+    b = bfp.bfp_fake_quant(x, 32, 8) * 4.0
+    assert jnp.allclose(a, b)
+
+
+def test_int4_pack_roundtrip():
+    rng = np.random.default_rng(4)
+    m = jnp.asarray(rng.integers(-8, 8, size=(6, 64)), jnp.int8)
+    for axis in (0, 1, -1):
+        rt = bfp.unpack_int4(bfp.pack_int4(m, axis), axis)
+        assert jnp.all(rt == m)
+
+
+def test_grouping_axis():
+    """Quantizing along different axes quantizes different groups."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32))
+    x = x.at[0, 0].set(1000.0)  # outlier
+    row = bfp.bfp_fake_quant(x, 32, 4, axis=-1)
+    col = bfp.bfp_fake_quant(x, 32, 4, axis=0)
+    # the outlier flattens its row group in one case, column in the other
+    assert float(jnp.abs(x[0, 1:] - row[0, 1:]).mean()) > \
+        float(jnp.abs(x[0, 1:] - col[0, 1:]).mean())
+
+
+def test_padding_of_ragged_axis():
+    x = jnp.ones((2, 40))  # 40 % 32 != 0
+    fq = bfp.bfp_fake_quant(x, 32, 8)
+    assert fq.shape == (2, 40)
+    assert jnp.allclose(fq, x, atol=1e-2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 10),
+       st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
+                min_size=32, max_size=32))
+def test_hypothesis_error_bound(m_bits, vals):
+    x = jnp.asarray(np.array(vals, np.float32))[None, :]
+    fq = bfp.bfp_fake_quant(x, 32, m_bits)
+    absmax = float(jnp.max(jnp.abs(x)))
+    if absmax == 0:
+        assert jnp.all(fq == 0)
+        return
+    E = np.clip(np.floor(np.log2(absmax)), bfp.EXP_MIN, bfp.EXP_MAX)
+    step = 2.0 ** (E - (m_bits - 2))
+    assert float(jnp.max(jnp.abs(x - fq))) <= step * (1 + 1e-5) + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_hypothesis_pack_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    m = jnp.asarray(rng.integers(-8, 8, size=(2, 32)), jnp.int8)
+    assert jnp.all(bfp.unpack_int4(bfp.pack_int4(m, -1), -1) == m)
+
+
+def test_storage_accounting():
+    assert bfp.kv_cache_reduction(8) == pytest.approx(0.4375)
+    assert bfp.kv_cache_reduction(4) == pytest.approx(0.6875)

@@ -1,0 +1,128 @@
+"""Per-kernel interpret-mode sweeps vs the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bfp
+from repro.kernels import ops, ref
+from repro.kernels.bfp_attention import (bfp_attention_decode_kernel,
+                                         bfp_attention_prefill_kernel)
+from repro.kernels.bfp_matmul import bfp_matmul_kernel, choose_dataflow
+from repro.kernels.bfp_quant import bfp_quantize_kernel
+from repro.quant.int4 import quantize_weight
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("shape", [(32, 64), (64, 256), (128, 96)])
+@pytest.mark.parametrize("m_bits", [4, 8])
+def test_quantize_kernel_bit_exact(shape, m_bits):
+    x = jnp.asarray(RNG.normal(size=shape).astype(np.float32)) * 5
+    mk, ek = bfp_quantize_kernel(x, mantissa_bits=m_bits, block_m=32,
+                                 block_k=64, interpret=True)
+    mr, er = ref.ref_bfp_quantize(x, m_bits)
+    assert jnp.all(mk == mr) and jnp.all(ek == er)
+
+
+@pytest.mark.parametrize("mkn", [(32, 128, 32), (64, 256, 96),
+                                 (16, 384, 64)])
+@pytest.mark.parametrize("dataflow", ["act_stationary",
+                                      "weight_stationary"])
+def test_matmul_kernel_vs_oracle(mkn, dataflow):
+    M, K, N = mkn
+    a = jnp.asarray(RNG.normal(size=(M, K)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(K, N)).astype(np.float32)) * 0.05
+    am, ae = ref.ref_bfp_quantize(a)
+    qw = quantize_weight(w, 128)
+    oracle = ref.ref_bfp_matmul(am, ae, qw.packed, qw.scale)
+    out = bfp_matmul_kernel(am, ae, qw.packed, qw.scale, dataflow=dataflow,
+                            block_m=16, block_n=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_int_path():
+    M, K, N = 32, 256, 48
+    a = jnp.asarray(RNG.normal(size=(M, K)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(K, N)).astype(np.float32)) * 0.05
+    am, ae = ref.ref_bfp_quantize(a)
+    qw = quantize_weight(w, 128)
+    out = bfp_matmul_kernel(am, ae, qw.packed, qw.scale, int_path=True,
+                            block_m=16, block_n=16, interpret=True)
+    oracle = ref.ref_bfp_matmul_int(am, ae, qw.packed, qw.scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("causal,cap,window", [(True, 0.0, 0),
+                                               (True, 50.0, 0),
+                                               (True, 0.0, 64),
+                                               (False, 0.0, 0)])
+def test_attention_prefill_kernel(causal, cap, window):
+    S, hd = 128, 64
+    q = jnp.asarray(RNG.normal(size=(S, hd)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(S, hd)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(S, hd)).astype(np.float32))
+    km, ke = ref.ref_bfp_quantize(k)
+    vm, ve = ops.quantize_v_token_grouped(v)
+    o_k = bfp_attention_prefill_kernel(q, km, ke, vm, ve, causal=causal,
+                                       logit_cap=cap, window=window,
+                                       block_q=32, block_s=32,
+                                       interpret=True)
+    o_r = ref.ref_bfp_attention_prefill(q, km, ke, vm, ve, causal=causal,
+                                        logit_cap=cap, window=window)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=1e-4)
+
+
+@pytest.mark.parametrize("valid_len", [1, 100, 256])
+def test_attention_decode_kernel(valid_len):
+    S, hd, rep = 256, 64, 4
+    q = jnp.asarray(RNG.normal(size=(rep, hd)).astype(np.float32))
+    kb = jnp.asarray(RNG.normal(size=(S, hd)).astype(np.float32))
+    vb = jnp.asarray(RNG.normal(size=(S, hd)).astype(np.float32))
+    km4, ke4 = bfp.bfp_quantize(kb, 32, 4, axis=-1)
+    km4p = bfp.pack_int4(km4.reshape(S, hd), axis=-1)
+    vm4, ve4 = bfp.bfp_quantize(vb, 32, 4, axis=0)
+    vm4 = jnp.moveaxis(vm4, (0, 1, 2), (2, 0, 1)).reshape(S, hd)
+    vm4p = bfp.pack_int4(vm4, axis=0)
+    o_k, m_k, l_k = bfp_attention_decode_kernel(
+        q, km4p, ke4, vm4p, ve4.T, valid_len, block_s=64, interpret=True)
+    o_r, m_r, l_r = ref.ref_bfp_decode_bulk(q, km4p, ke4, vm4p, ve4.T,
+                                            valid_len)
+    np.testing.assert_allclose(np.asarray(o_k / l_k),
+                               np.asarray(o_r / l_r[:, None]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m_k[:, 0]), np.asarray(m_r),
+                               atol=1e-6)
+
+
+def test_batched_wrappers_gqa():
+    B, S, H, Hkv, hd = 2, 64, 4, 2, 64
+    q = jnp.asarray(RNG.normal(size=(B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(B, S, Hkv, hd)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(B, S, Hkv, hd)).astype(np.float32))
+    km, ke = ops.bfp_quantize(k)
+    vm = jnp.stack([jnp.stack([ops.quantize_v_token_grouped(v[b, :, h])[0]
+                               for h in range(Hkv)], 1) for b in range(B)])
+    ve = jnp.stack([jnp.stack([ops.quantize_v_token_grouped(v[b, :, h])[1]
+                               for h in range(Hkv)], 1) for b in range(B)])
+    o = ops.bfp_attention_prefill(q, km, ke, vm, ve, interpret=True)
+    assert o.shape == (B, S, H, hd)
+    assert not bool(jnp.isnan(o).any())
+
+
+def test_dataflow_choice_crossover():
+    assert choose_dataflow(16, 4096, 4096) == "act_stationary"
+    assert choose_dataflow(8192, 4096, 4096) == "weight_stationary"
+
+
+def test_bfp_linear_end_to_end():
+    x = jnp.asarray(RNG.normal(size=(4, 8, 256)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(256, 64)).astype(np.float32)) * 0.05
+    qw = quantize_weight(w, 128)
+    out = ops.bfp_linear(x, qw.packed, qw.scale, interpret=True)
+    from repro.layers.common import weight_dequant
+    x_fq = bfp.bfp_fake_quant(x, 32, 8)
+    expect = x_fq @ weight_dequant(qw, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,45 @@
+"""Analytical accelerator model sanity (Fig. 16-19 layer)."""
+import pytest
+
+from repro.perfmodel.accelerator import (ENGINES, PAPER_MODELS, Gemm,
+                                         llm_prefill_gemms,
+                                         pe_level_table, run_workload)
+
+
+def test_pe_table_matches_paper_envelope():
+    pe = pe_level_table()
+    h = pe["harmonia"]
+    assert 4.0 <= h["area_eff_x"] <= 5.0       # paper: up to 4.85x
+    assert 4.0 <= h["energy_eff_x"] <= 5.0     # paper: up to 4.52x
+    m8m8 = pe["harmonia-m8m8"]
+    assert m8m8["area_eff_x"] == pytest.approx(h["area_eff_x"] / 2)
+
+
+def test_harmonia_beats_baselines_joint():
+    mcfg = PAPER_MODELS["llama2-7b"]
+    gemms = llm_prefill_gemms(seq=2048, **mcfg)
+    res = {e: run_workload(gemms, e) for e in ENGINES}
+    for e in ENGINES:
+        if e == "harmonia":
+            continue
+        assert res["harmonia"]["seconds"] < res[e]["seconds"], e
+
+
+def test_gains_grow_with_sequence():
+    mcfg = PAPER_MODELS["llama3.2-3b"]
+    sp = {}
+    for s in (2048, 16384):
+        gemms = llm_prefill_gemms(seq=s, **mcfg)
+        fp = run_workload(gemms, "fp16-fp16")
+        hm = run_workload(gemms, "harmonia")
+        sp[s] = fp["seconds"] / hm["seconds"]
+    assert sp[16384] >= sp[2048] * 0.95
+
+
+def test_memory_bound_gemv_prefers_compression():
+    """Decode-like GEMV: time is EMA-bound, so 4-bit weights win ~4x."""
+    g16 = Gemm(1, 4096, 4096, "linear", a_fmt="fp16", b_fmt="fp16")
+    g4 = Gemm(1, 4096, 4096, "linear", a_fmt="bfp8", b_fmt="int4")
+    t16 = run_workload([g16], "fp16-fp16")["seconds"]
+    t4 = run_workload([g4], "harmonia")["seconds"]
+    assert t16 / t4 > 2.5

@@ -1,0 +1,94 @@
+"""Sharding rules: PartitionSpecs for every assigned arch (no devices
+needed — specs are pure metadata) + debug-mesh end-to-end jit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_arch
+from repro.distributed.sharding import (batch_pspec, cache_pspecs,
+                                        param_pspecs)
+from repro.models.init import abstract_params
+from repro.quant.int4 import abstract_pack_params
+
+
+class FakeMesh:
+    """Mesh stand-in: sharding-rule functions only read .shape."""
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+MESH_MP = FakeMesh(pod=2, data=16, model=16)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_pspecs_cover_tree(arch):
+    cfg = get_arch(arch).config
+    ap = abstract_params(cfg)
+    specs = param_pspecs(cfg, ap, MESH)
+    leaves_p = jax.tree.leaves(ap)
+    leaves_s = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves_p) == len(leaves_s)
+    for leaf, spec in zip(leaves_p, leaves_s):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            assert leaf.shape[dim] % MESH.shape[ax] == 0, \
+                f"{arch}: {leaf.shape} dim {dim} not divisible by {ax}"
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "llama4-scout-17b-a16e"])
+def test_packed_params_inherit_rules(arch):
+    cfg = get_arch(arch).config
+    ap = abstract_pack_params(abstract_params(cfg))
+    specs = param_pspecs(cfg, ap, MESH)
+    # expert stacks shard on the expert axis under EP
+    if cfg.n_experts:
+        s = specs["blocks"]["attn"]["w_gate"]
+        gate_spec = s.packed if hasattr(s, "packed") else s
+        assert "model" in tuple(gate_spec)
+
+
+def test_moe_expert_parallel():
+    cfg = get_arch("phi3.5-moe-42b-a6.6b").config
+    ap = abstract_params(cfg)
+    specs = param_pspecs(cfg, ap, MESH)
+    g = specs["blocks"]["attn"]["w_gate"]
+    # (L, E, d, ff): expert axis sharded
+    assert tuple(g) [1] == "model"
+
+
+def test_batch_pspec():
+    sp = batch_pspec(MESH, 256)
+    assert "data" in str(sp) and "pod" not in str(sp)
+    mp = batch_pspec(MESH_MP, 256)
+    assert "data" in str(mp) and "pod" in str(mp)
+    assert tuple(batch_pspec(MESH, 1)) == ()
+
+
+def test_cache_pspecs_shard_batch_and_tail():
+    from functools import partial
+    from repro.models import lm
+    cfg = get_arch("deepseek-7b").smoke
+    caches = jax.eval_shape(partial(lm.init_decode_caches, cfg, 128, 128))
+    specs = cache_pspecs(caches, MESH, 128)
+    k_spec = specs["scan"]["attn"].k_bulk_mant
+    assert "data" in str(k_spec) or ("data",) in tuple(k_spec)
+
+
+def test_debug_mesh_end_to_end():
+    """Real 4-device jit on a forced-multi-device subprocess-free path:
+    only runs when the host exposes >= 4 devices (dryrun sets 512)."""
+    if len(jax.devices()) < 4:
+        pytest.skip("single-device host; covered by dryrun sweep")
+    from repro.launch.mesh import make_debug_mesh
+    mesh = make_debug_mesh(2, 2)
+    x = jnp.arange(16.0).reshape(4, 4)
+    y = jax.jit(lambda a: a * 2,
+                in_shardings=jax.NamedSharding(mesh, P("data", "model"))
+                )(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x) * 2)

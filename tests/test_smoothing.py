@@ -1,0 +1,79 @@
+"""Smoothing invariants: Eq. 1 identity, softmax shift-invariance,
+weight folding, calibration improvement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.smoothing import (apply_online_offsets,
+                                  compute_online_offsets,
+                                  fold_offline_scale,
+                                  smoothing_identity_check)
+
+
+def test_scale_identity():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 8, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 8, 32)).astype(np.float32))
+    s = jnp.asarray(rng.uniform(0.5, 2.0, size=(32,)).astype(np.float32))
+    assert float(smoothing_identity_check(q, k, s)) < 1e-4
+
+
+def test_softmax_shift_invariance():
+    """Subtracting one offset vector from every key leaves softmax
+    unchanged (the basis of online smoothing)."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(10, 16)).astype(np.float32))
+    off = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+    p1 = jax.nn.softmax(q @ k.T, axis=-1)
+    p2 = jax.nn.softmax(q @ (k - off).T, axis=-1)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-5)
+
+
+def test_fold_preserves_attention_logits():
+    rng = np.random.default_rng(2)
+    d, qd, kd = 24, 32, 16  # GQA: q heads = 2x kv heads
+    x = jnp.asarray(rng.normal(size=(5, d)).astype(np.float32))
+    wq = jnp.asarray(rng.normal(size=(d, qd)).astype(np.float32))
+    wk = jnp.asarray(rng.normal(size=(d, kd)).astype(np.float32))
+    s = jnp.asarray(rng.uniform(0.5, 2.0, size=(kd,)).astype(np.float32))
+    wq2, wk2 = fold_offline_scale(wq, wk, s)
+    q1 = (x @ wq).reshape(5, 2, kd)
+    k1 = x @ wk
+    q2 = (x @ wq2).reshape(5, 2, kd)
+    k2 = x @ wk2
+    l1 = jnp.einsum("qhd,kd->hqk", q1, k1)
+    l2 = jnp.einsum("qhd,kd->hqk", q2, k2)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=2e-5,
+                               atol=1e-4)
+
+
+def test_online_offsets_select_topk_signed():
+    rng = np.random.default_rng(3)
+    B, W, H, D = 2, 32, 1, 64
+    k = jnp.asarray(rng.normal(size=(B, W, H, D)).astype(np.float32))
+    k = k.at[:, :, :, 7].add(-10.0)   # strong negative outlier channel
+    k = k.at[:, :, :, 13].add(8.0)    # strong positive outlier channel
+    off = compute_online_offsets(k, top_k=2)
+    assert off.shape == (B, H, D)
+    nz = np.nonzero(np.asarray(off[0, 0]))[0]
+    assert set(nz.tolist()) == {7, 13}
+    assert float(off[0, 0, 7]) < 0      # offset keeps the sign
+    assert float(off[0, 0, 13]) > 0
+    # applying offsets shrinks those channels
+    k2 = apply_online_offsets(k, off)
+    assert float(jnp.abs(k2[..., 7]).max()) < float(jnp.abs(k[..., 7]).max())
+
+
+def test_offsets_reduce_bfp_error():
+    """Quantization error of K drops after offset subtraction."""
+    from repro.core import bfp
+    rng = np.random.default_rng(4)
+    B, W, H, D = 1, 32, 1, 64
+    k = jnp.asarray(rng.normal(size=(B, W, H, D)).astype(np.float32))
+    k = k.at[:, :, :, 5].add(20.0)
+    off = compute_online_offsets(k, top_k=4)
+    e_raw = float(jnp.abs(k - bfp.bfp_fake_quant(k, 32, 4)).mean())
+    k_s = apply_online_offsets(k, off)
+    e_s = float(jnp.abs(k_s - bfp.bfp_fake_quant(k_s, 32, 4)).mean())
+    assert e_s < e_raw

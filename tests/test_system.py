@@ -1,0 +1,100 @@
+"""End-to-end system behaviour: train -> calibrate -> pack -> serve, and
+the paper's headline claims at system level (hypothesis invariants)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bfp
+from repro.core.quant_config import harmonia, get_recipe
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.init import init_params
+from repro.quant.int4 import pack_params
+from repro.serving.engine import Engine, EngineConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+CFG = ModelConfig(name="sys", family="dense", n_layers=2, d_model=96,
+                  n_heads=4, n_kv_heads=2, head_dim=24 + 8, d_ff=192,
+                  vocab_size=259, param_dtype="float32")
+
+
+def test_train_pack_serve_roundtrip(tmp_path):
+    tcfg = TrainerConfig(total_steps=8, batch_size=2, seq_len=64,
+                         checkpoint_dir=str(tmp_path),
+                         checkpoint_every=8, log_every=100)
+    res = Trainer(CFG, tcfg, log_fn=lambda s: None).run()
+    params = res["state"]["params"]
+    packed = pack_params(params)
+    eng = Engine(packed, CFG, EngineConfig(max_seq=128, max_new_tokens=4,
+                                           quant=harmonia(4)))
+    out = eng.generate(["the system"])
+    assert out["tokens"].shape == (1, 4)
+
+
+def test_quant_recipes_ordering():
+    """More aggressive precision must not reduce output error vs fp."""
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 160), 0, 259)
+    fp = lm.forward(params, CFG, toks)
+
+    def err(recipe):
+        q = get_recipe(recipe)
+        out = lm.forward(params, CFG, toks, quant=q, eval_kv=True)
+        return float(jnp.abs(out - fp).mean())
+
+    e8 = err("harmonia_kv8")
+    e4 = err("harmonia_kv4")
+    e_naive = err("harmonia_naive_kv4")
+    assert e8 <= e4 + 1e-6, "8-bit KV must not be worse than 4-bit"
+    assert e4 <= e_naive + 1e-6, \
+        "asymmetric+smoothing must not be worse than naive"
+
+
+def test_decode_matches_forward_tail():
+    """Greedy decode continuation from a prefilled cache matches the
+    teacher-forced forward within quantized-cache tolerance."""
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 64), 0, 259)
+    lg, caches = lm.prefill(params, CFG, toks, max_seq=160)
+    lg2, _ = lm.decode_step(params, CFG, jnp.argmax(lg, -1), caches)
+    full = lm.forward(
+        params, CFG, jnp.concatenate([toks, jnp.argmax(lg, -1)[:, None]],
+                                     axis=1))
+    # only 8-bit regions are active at this length
+    assert float(jnp.abs(lg2 - full[:, -1]).max()) < 0.3
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 6, 8]))
+def test_hypothesis_cache_policy_error_monotone(seed, bits):
+    """System invariant: per-tensor KV error shrinks with mantissa bits,
+    for any input."""
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray(rng.normal(size=(1, 96, 1, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 96, 1, 32)).astype(np.float32))
+    from repro.core.kvcache import fake_quant_kv
+    from repro.core.quant_config import KvQuantConfig
+    e = {}
+    for b in (bits, 8):
+        kq, vq = fake_quant_kv(k, v, KvQuantConfig(
+            mantissa_bits=b, high_mantissa_bits=b, asymmetric=False))
+        e[b] = float(jnp.abs(k - kq).mean() + jnp.abs(v - vq).mean())
+    assert e[8] <= e[bits] + 1e-7
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_hypothesis_packed_weights_function_preserving(seed):
+    """pack_params changes weights by at most the int4 grid step."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(128, 16)).astype(np.float32))
+    from repro.quant.int4 import quantize_weight
+    from repro.layers.common import weight_dequant
+    deq = weight_dequant(quantize_weight(w, 128), jnp.float32)
+    gmax = np.abs(np.asarray(w)).reshape(1, 128, 16).max(axis=1)
+    step = gmax / 7.0
+    assert np.all(np.abs(np.asarray(w - deq)).reshape(1, 128, 16)
+                  <= step[:, None] * 0.5 + 1e-6)

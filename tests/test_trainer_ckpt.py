@@ -1,0 +1,129 @@
+"""Trainer fault tolerance + checkpoint manager contracts."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.models.config import ModelConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                  n_heads=2, n_kv_heads=1, head_dim=32, d_ff=128,
+                  vocab_size=259, param_dtype="float32")
+
+
+def _tcfg(tmp, **kw):
+    base = dict(total_steps=6, batch_size=2, seq_len=64,
+                checkpoint_dir=tmp, checkpoint_every=2, log_every=100)
+    base.update(kw)
+    return TrainerConfig(**base)
+
+
+def test_loss_decreases(tmp_path):
+    t = Trainer(CFG, _tcfg(str(tmp_path), total_steps=20,
+                           checkpoint_every=20), log_fn=lambda s: None)
+    res = t.run()
+    assert res["losses"][-1] < res["losses"][0]
+
+
+def test_failure_injection_and_resume_determinism(tmp_path):
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    # run A: straight through
+    resA = Trainer(CFG, _tcfg(d1), log_fn=lambda s: None).run()
+    # run B: crash at step 4, then resume
+    with pytest.raises(RuntimeError):
+        Trainer(CFG, _tcfg(d2, failure_at=4), log_fn=lambda s: None).run()
+    resB = Trainer(CFG, _tcfg(d2), log_fn=lambda s: None).run()
+    pa = resA["state"]["params"]
+    pb = resB["state"]["params"]
+    deltas = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), pa, pb)
+    assert max(jax.tree.leaves(deltas)) < 1e-5, \
+        "resumed run must reproduce the uninterrupted run"
+
+
+def test_grad_compression_trains(tmp_path):
+    t = Trainer(CFG, _tcfg(str(tmp_path), total_steps=10,
+                           checkpoint_every=10,
+                           grad_compression="int8_ef"),
+                log_fn=lambda s: None)
+    res = t.run()
+    assert res["losses"][-1] < res["losses"][0] + 0.1
+
+
+def test_checkpoint_atomic_and_keep(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"w": jnp.arange(8.0), "b": {"x": jnp.ones((2, 2))}}
+    for s in (1, 2, 3):
+        mgr.save(s, state, extra={"loss": s * 1.0})
+    assert mgr.all_steps() == [2, 3]          # keep-2 retention
+    restored, extra = mgr.restore(3, state)
+    assert extra["loss"] == 3.0
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(8.0))
+    # a stray .tmp dir must not break discovery
+    os.makedirs(str(tmp_path / "step_00000009.tmp"))
+    assert mgr.latest_step() == 3
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"a": jnp.zeros(3)})
+    with pytest.raises(ValueError):
+        mgr.restore(1, {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    """Checkpoints store logical arrays: reload under a different
+    'mesh' (here: different device placement) works unchanged."""
+    mgr = CheckpointManager(str(tmp_path))
+    state = {"w": jnp.arange(16.0).reshape(4, 4)}
+    mgr.save(5, state)
+    out, _, _ = mgr.restore_latest(state)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(state["w"]))
+
+
+def test_data_pipeline_determinism():
+    from repro.data.pipeline import PipelineConfig, TokenPipeline
+    p1 = TokenPipeline(PipelineConfig(batch_size=4, seq_len=32, seed=3))
+    p2 = TokenPipeline(PipelineConfig(batch_size=4, seq_len=32, seed=3))
+    a1, b1 = p1.batch_at(17)
+    a2, b2 = p2.batch_at(17)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(b1, b2)
+    # labels shifted by one
+    np.testing.assert_array_equal(a1[:, 1:], b1[:, :-1])
+
+
+def test_data_pipeline_rank_sharding():
+    from repro.data.pipeline import PipelineConfig, TokenPipeline
+    full = TokenPipeline(PipelineConfig(batch_size=4, seq_len=32, seed=5,
+                                        rank=0, world=1))
+    # world=2 ranks each take half the global batch of 4*2
+    r0 = TokenPipeline(PipelineConfig(batch_size=4, seq_len=32, seed=5,
+                                      rank=0, world=2))
+    r1 = TokenPipeline(PipelineConfig(batch_size=4, seq_len=32, seed=5,
+                                      rank=1, world=2))
+    a0, _ = r0.batch_at(3)
+    a1, _ = r1.batch_at(3)
+    assert not np.array_equal(a0, a1)
+
+
+def test_compression_error_feedback():
+    from repro.distributed.compression import (compress_decompress,
+                                               init_error_feedback)
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(
+        size=(64,)).astype(np.float32))}
+    resid = init_error_feedback(g)
+    # accumulated compressed updates converge to accumulated true grads
+    acc_c = jnp.zeros(64)
+    for _ in range(50):
+        gc, resid = compress_decompress(g, resid)
+        acc_c = acc_c + gc["w"]
+    acc_t = g["w"] * 50
+    rel = float(jnp.abs(acc_c - acc_t).max() / jnp.abs(acc_t).max())
+    assert rel < 0.02, f"error feedback must bound drift, got {rel}"
