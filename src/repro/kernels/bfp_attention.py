@@ -11,6 +11,29 @@ Decode: one-step attention of a kv-head's query group against the 4-bit
 (o, m, l) so the XLA epilogue merges it with the small 8-bit init/local/
 residual regions.
 
+Two generations of each kernel live here:
+
+* ``*_kernel`` — the original single-head kernels.  Batch and kv-head are
+  supplied by ``jax.vmap`` towers in ops.py (the ``legacy=True`` path),
+  which costs four ``moveaxis`` layout copies per call and prevents any
+  cross-head scheduling.
+* ``*_batched`` — grid-fused kernels: the (batch × kv-head) product is a
+  leading grid dimension and the GQA query group ``rep`` is folded into
+  the q tile, so one ``pallas_call`` covers the whole batched GQA op with
+  zero layout copies (all slicing happens in BlockSpec index maps).
+  Prefill additionally skips fully-masked causal/window tiles with a
+  ``pl.when`` guard (see ``prefill_tile_counts``); decode skips tiles
+  fully outside [start, valid_len).
+
+Grid-order note: Pallas executes the grid sequentially on a TPU core,
+last dimension fastest.  Both batched kernels keep the key-tile dimension
+innermost, so for a fixed (batch·kv-head, q-tile) the flash accumulator
+scratch is swept over key tiles exactly like the legacy kernels — and a
+``pl.when``-guarded body is a real branch in the Mosaic lowering (and a
+``lax.cond`` in interpret mode), so skipped tiles genuinely skip the QK
+dot, the softmax update and the PV dot rather than masking them after
+the fact.
+
 P is kept fp32 inside the kernels: on TPU the MXU consumes fp natively, so
 the ASIC's P->BFP conversion (which exists to feed integer PEs) would only
 lose accuracy without a perf win — recorded in DESIGN.md §2.  The P-BFP
@@ -27,6 +50,15 @@ from jax.experimental import pallas as pl
 GROUP = 32
 NEG_INF = -1e30
 
+# Default tile sizes for the grid-fused kernels.  Larger than the legacy
+# 128 defaults: with (batch x kv-head) amortizing the grid, a 512-tile
+# keeps every operand block plus the fp32 accumulator comfortably inside
+# TPU VMEM (~1.5 MiB at hd=128, rep=4) while cutting grid-step overhead
+# 16x vs 128-tiles (DESIGN.md §3).
+BLOCK_Q_BATCHED = 512
+BLOCK_S_BATCHED = 512
+BLOCK_S_DECODE = 512
+
 
 def _dq_k_tile(k_mant, k_exp, mantissa_bits):
     """(bs, hd) int8 + (bs, hd/32) -> (bs, hd) f32 (per-token groups)."""
@@ -42,6 +74,60 @@ def _dq_v_tile(v_mant, v_exp, mantissa_bits):
     step = jnp.exp2(v_exp.astype(jnp.float32) - (mantissa_bits - 2))
     return (v_mant.astype(jnp.float32).reshape(bs // GROUP, GROUP, hd)
             * step[:, None, :]).reshape(bs, hd)
+
+
+def _dq_k4_tile(km, ke, hd):
+    """(bs, hd/2) int8 nibble pairs + (bs, hd/32) exps -> (bs, hd) f32."""
+    kmu = km.astype(jnp.uint8)
+    lo = (kmu & 0xF).astype(jnp.int32)
+    hi = ((kmu >> 4) & 0xF).astype(jnp.int32)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    k_int = jnp.stack([lo, hi], axis=-1).reshape(km.shape[0], hd)
+    kstep = jnp.exp2(ke.astype(jnp.float32) - 2.0)  # m=4
+    return (k_int.astype(jnp.float32).reshape(-1, hd // GROUP, GROUP)
+            * kstep[..., None]).reshape(-1, hd)
+
+
+def _dq_v4_tile(vm, ve, hd):
+    """(bs/2, hd) token-packed nibbles + (bs/32, hd) exps -> (bs, hd) f32."""
+    vmu = vm.astype(jnp.uint8)
+    vlo = (vmu & 0xF).astype(jnp.int32)
+    vhi = ((vmu >> 4) & 0xF).astype(jnp.int32)
+    vlo = jnp.where(vlo >= 8, vlo - 16, vlo)
+    vhi = jnp.where(vhi >= 8, vhi - 16, vhi)
+    v_int = jnp.stack([vlo, vhi], axis=1).reshape(-1, hd)
+    vstep = jnp.exp2(ve.astype(jnp.float32) - 2.0)  # (bs/32, hd)
+    return (v_int.astype(jnp.float32).reshape(-1, GROUP, hd)
+            * vstep[:, None, :]).reshape(-1, hd)
+
+
+def _aligned_block(S: int, block: int) -> int:
+    """Largest GROUP-aligned divisor of S that is <= block.
+
+    Keeps the grid tiled (so causal/dead tile skipping stays active)
+    for any S that is a multiple of GROUP — e.g. the decode bulk
+    region's S = max_seq - 32 is rarely a multiple of the 512 default,
+    but always of 32.  Truly ragged S (not a multiple of GROUP) degrades
+    to a single tile — padding packed K/V would break the S/32 exponent
+    layouts."""
+    b = min(block, S)
+    b -= b % GROUP
+    while b >= GROUP:
+        if S % b == 0:
+            return b
+        b -= GROUP
+    return S
+
+
+def _resolve_blocks(S, block_q, block_s):
+    bq = min(block_q, S)
+    if S % bq:
+        bq = _aligned_block(S, block_q)
+    bs = min(block_s, S)
+    if S % bs or bs % GROUP:
+        bs = _aligned_block(S, block_s)
+    return bq, bs
 
 
 # ---------------------------------------------------------------------------
@@ -107,16 +193,12 @@ def bfp_attention_prefill_kernel(q, k_mant, k_exp, v_mant, v_exp, *,
                                  interpret: bool = False):
     """Single-head: q (S, hd) fp; K (S, hd)+(S, hd/32); V (S, hd)+(S/32, hd).
 
-    Vmap over (batch, head) in ops.py.
+    Legacy entry point: vmapped over (batch, head) in ops.py.  New callers
+    should use ``bfp_attention_prefill_batched``.
     """
     from jax.experimental.pallas import tpu as pltpu
     S, hd = q.shape
-    bq = min(block_q, S)
-    bs = min(block_s, S)
-    if S % bq:
-        bq = S
-    if S % bs:
-        bs = S
+    bq, bs = _resolve_blocks(S, block_q, block_s)
     n_s = S // bs
     kernel = functools.partial(
         _prefill_kernel, mantissa_bits=mantissa_bits, causal=causal,
@@ -143,6 +225,160 @@ def bfp_attention_prefill_kernel(q, k_mant, k_exp, v_mant, v_exp, *,
 
 
 # ---------------------------------------------------------------------------
+# Prefill (grid-fused batched)
+# ---------------------------------------------------------------------------
+
+def _tile_live(iq, ik, *, block_q, block_s, causal, window):
+    """Whether causal/window masking leaves anything alive in tile
+    (iq, ik).  Shared between the kernel's ``pl.when`` guard and the
+    ``prefill_tile_counts`` probe so benchmarks count exactly what the
+    kernel skips.  Works on both Python ints and traced scalars."""
+    if not causal:
+        return True
+    first_q, last_q = iq * block_q, iq * block_q + block_q - 1
+    first_k, last_k = ik * block_s, ik * block_s + block_s - 1
+    live = first_k <= last_q                       # below/on the diagonal
+    if window > 0:
+        live = live & (first_q - last_k < window)  # not fully out-of-window
+    return live
+
+
+def prefill_tile_counts(S: int, block_q: int = BLOCK_Q_BATCHED,
+                        block_s: int = BLOCK_S_BATCHED,
+                        causal: bool = True, window: int = 0):
+    """(live, total) per-head tile counts for the batched prefill grid.
+
+    ``live/total`` is the fraction of (QK dot + softmax + PV dot) tile
+    bodies the fused kernel actually executes; the rest are skipped by the
+    ``pl.when`` guard."""
+    bq, bs = _resolve_blocks(S, block_q, block_s)
+    n_q, n_s = S // bq, S // bs
+    live = sum(bool(_tile_live(iq, ik, block_q=bq, block_s=bs,
+                               causal=causal, window=window))
+               for iq in range(n_q) for ik in range(n_s))
+    return live, n_q * n_s
+
+
+def _prefill_batched_kernel(q_ref, km_ref, ke_ref, vm_ref, ve_ref, o_ref,
+                            acc_ref, m_ref, l_ref, *, mantissa_bits,
+                            causal, logit_cap, window, block_q, block_s,
+                            n_s, rep):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def _body():
+        q = q_ref[0, :, 0].reshape(block_q * rep, -1).astype(jnp.float32)
+        hd = q.shape[-1]
+        k = _dq_k_tile(km_ref[0, :, 0], ke_ref[0, :, 0], mantissa_bits)
+        v = _dq_v_tile(vm_ref[0, :, 0], ve_ref[0, :, 0], mantissa_bits)
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) \
+            / jnp.sqrt(float(hd))                  # (bq*rep, bs)
+        if logit_cap > 0:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+
+        # row r of the folded q tile is query position iq*bq + r//rep
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0) // rep
+        k_pos = ik * block_s + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = jnp.ones(s.shape, jnp.bool_)
+        if causal:
+            d = q_pos - k_pos
+            mask = d >= 0
+            if window > 0:
+                mask &= d < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # (bq*rep, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        pl.when(_tile_live(iq, ik, block_q=block_q, block_s=block_s,
+                           causal=True, window=window))(_body)
+    else:
+        _body()
+
+    @pl.when(ik == n_s - 1)
+    def _fin():
+        l = l_ref[...]
+        out = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0)
+        o_ref[0, :, 0] = out.reshape(block_q, rep, -1).astype(o_ref.dtype)
+
+
+def bfp_attention_prefill_batched(q, k_mant, k_exp, v_mant, v_exp, *,
+                                  mantissa_bits: int = 8,
+                                  causal: bool = True,
+                                  logit_cap: float = 0.0, window: int = 0,
+                                  block_q: int = BLOCK_Q_BATCHED,
+                                  block_s: int = BLOCK_S_BATCHED,
+                                  out_dtype=jnp.float32,
+                                  interpret: bool = False):
+    """Grid-fused batched GQA prefill on packed K/V.
+
+    q: (B, S, H, hd) fp; K (B, S, Hkv, hd) + (B, S, Hkv, hd/32);
+    V token-grouped (B, S, Hkv, hd) + (B, S/32, Hkv, hd).
+    Returns (B, S, H, hd).
+
+    Grid is (B·Hkv, S/bq, S/bs) with the query group rep = H/Hkv folded
+    into the q tile; all (batch, head) slicing happens in BlockSpec index
+    maps so no operand is ever transposed or copied.  Fully-masked causal
+    tiles are skipped (see ``prefill_tile_counts``).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    B, S, H, hd = q.shape
+    Hkv = k_mant.shape[2]
+    rep = H // Hkv
+    if H % Hkv:
+        raise ValueError(f"H={H} must be a multiple of Hkv={Hkv}")
+    bq, bs = _resolve_blocks(S, block_q, block_s)
+    n_q, n_s = S // bq, S // bs
+    q5 = q.reshape(B, S, Hkv, rep, hd)
+    kernel = functools.partial(
+        _prefill_batched_kernel, mantissa_bits=mantissa_bits, causal=causal,
+        logit_cap=logit_cap, window=window, block_q=bq, block_s=bs,
+        n_s=n_s, rep=rep)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hkv, n_q, n_s),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, rep, hd),
+                         lambda b, i, j: (b // Hkv, i, b % Hkv, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, i, j: (b // Hkv, j, b % Hkv, 0)),
+            pl.BlockSpec((1, bs, 1, hd // GROUP),
+                         lambda b, i, j: (b // Hkv, j, b % Hkv, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, i, j: (b // Hkv, j, b % Hkv, 0)),
+            pl.BlockSpec((1, bs // GROUP, 1, hd),
+                         lambda b, i, j: (b // Hkv, j, b % Hkv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, rep, hd),
+                               lambda b, i, j: (b // Hkv, i, b % Hkv, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, Hkv, rep, hd), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq * rep, hd), jnp.float32),
+            pltpu.VMEM((bq * rep, 1), jnp.float32),
+            pltpu.VMEM((bq * rep, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q5, k_mant, k_exp, v_mant, v_exp)
+    return out.reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
 # Decode (bulk region, 4-bit)
 # ---------------------------------------------------------------------------
 
@@ -159,28 +395,8 @@ def _decode_kernel(len_ref, q_ref, km_ref, ke_ref, vm_ref, ve_ref,
 
     q = q_ref[...].astype(jnp.float32)                     # (rep, hd)
     hd = q.shape[-1]
-
-    km = km_ref[...]                                       # (bs, hd/2) nibbles
-    kmu = km.astype(jnp.uint8)
-    lo = (kmu & 0xF).astype(jnp.int32)
-    hi = ((kmu >> 4) & 0xF).astype(jnp.int32)
-    lo = jnp.where(lo >= 8, lo - 16, lo)
-    hi = jnp.where(hi >= 8, hi - 16, hi)
-    k_int = jnp.stack([lo, hi], axis=-1).reshape(km.shape[0], hd)
-    kstep = jnp.exp2(ke_ref[...].astype(jnp.float32) - 2.0)  # m=4
-    k = (k_int.astype(jnp.float32).reshape(-1, hd // GROUP, GROUP)
-         * kstep[..., None]).reshape(-1, hd)               # (bs, hd)
-
-    vm = vm_ref[...]                                       # (bs/2, hd) pairs
-    vmu = vm.astype(jnp.uint8)
-    vlo = (vmu & 0xF).astype(jnp.int32)
-    vhi = ((vmu >> 4) & 0xF).astype(jnp.int32)
-    vlo = jnp.where(vlo >= 8, vlo - 16, vlo)
-    vhi = jnp.where(vhi >= 8, vhi - 16, vhi)
-    v_int = jnp.stack([vlo, vhi], axis=1).reshape(-1, hd)  # (bs, hd)
-    vstep = jnp.exp2(ve_ref[...].astype(jnp.float32) - 2.0)  # (bs/32, hd)
-    v = (v_int.astype(jnp.float32).reshape(-1, GROUP, hd)
-         * vstep[:, None, :]).reshape(-1, hd)
+    k = _dq_k4_tile(km_ref[...], ke_ref[...], hd)          # (bs, hd)
+    v = _dq_v4_tile(vm_ref[...], ve_ref[...], hd)          # (bs, hd)
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) \
         / jnp.sqrt(float(hd))                              # (rep, bs)
@@ -207,7 +423,7 @@ def _decode_kernel(len_ref, q_ref, km_ref, ke_ref, vm_ref, ve_ref,
 def bfp_attention_decode_kernel(q, k_mant4, k_exp, v_mant4, v_exp,
                                 valid_len, *, block_s: int = 512,
                                 interpret: bool = False):
-    """One kv-head decode over the 4-bit bulk region.
+    """One kv-head decode over the 4-bit bulk region (legacy entry).
 
     q: (rep, hd) — the query-head group of this kv head;
     k_mant4: (S, hd/2) int8 nibbles (packed along hd);
@@ -258,4 +474,137 @@ def bfp_attention_decode_kernel(q, k_mant4, k_exp, v_mant4, v_exp,
       v_mant4, v_exp)
 
 
-__all__ = ["bfp_attention_prefill_kernel", "bfp_attention_decode_kernel"]
+# ---------------------------------------------------------------------------
+# Decode (grid-fused batched)
+# ---------------------------------------------------------------------------
+
+def _decode_batched_kernel(len_ref, q_ref, km_ref, ke_ref, vm_ref, ve_ref,
+                           o_ref, m_out_ref, l_out_ref,
+                           acc_ref, m_ref, l_ref, *, block_s, n_s, n_kv,
+                           logit_cap):
+    bh, ik = pl.program_id(0), pl.program_id(1)
+    b = bh // n_kv
+    valid_len = len_ref[0]
+    start = len_ref[1 + b]        # first valid slot of this batch row
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # tile is dead when it lies entirely beyond valid_len or entirely
+    # before this row's left-pad start
+    live = (ik * block_s < valid_len) & (ik * block_s + block_s > start)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)                # (rep, hd)
+        hd = q.shape[-1]
+        k = _dq_k4_tile(km_ref[0, :, 0], ke_ref[0, :, 0], hd)
+        v = _dq_v4_tile(vm_ref[0, :, 0], ve_ref[0, :, 0], hd)
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) \
+            / jnp.sqrt(float(hd))                          # (rep, bs)
+        if logit_cap > 0:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        pos = ik * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = (pos < valid_len) & (pos >= start)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_s - 1)
+    def _fin():
+        o_ref[0, 0] = acc_ref[...]
+        m_out_ref[0, 0] = m_ref[...]
+        l_out_ref[0, 0] = l_ref[...]
+
+
+def bfp_attention_decode_batched(q, k_mant4, k_exp, v_mant4, v_exp,
+                                 valid_len, *, start=None,
+                                 logit_cap: float = 0.0,
+                                 block_s: int = BLOCK_S_DECODE,
+                                 interpret: bool = False):
+    """Grid-fused batched GQA decode over the 4-bit bulk region.
+
+    q: (B, H, hd); k_mant4: (B, S, Hkv, hd/2); k_exp: (B, S, Hkv, hd/32);
+    v_mant4: (B, S/2, Hkv, hd); v_exp: (B, S/32, Hkv, hd);
+    valid_len: () int32 shared upper bound; start: optional (B,) int32
+    first-valid slot per row (left-pad masking — the serving engine's
+    ``pad_prefix`` shifted into bulk-slot space).
+
+    Grid is (B·Hkv, S/bs); key tiles fully outside [start, valid_len) are
+    skipped.  Returns the flash triple (o (B, H, hd) unnormalized,
+    m (B, H, 1), l (B, H, 1)).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    B, H, hd = q.shape
+    S, Hkv = k_mant4.shape[1], k_mant4.shape[2]
+    rep = H // Hkv
+    if H % Hkv:
+        raise ValueError(f"H={H} must be a multiple of Hkv={Hkv}")
+    bs = min(block_s, S)
+    if S % bs or bs % GROUP:
+        bs = _aligned_block(S, block_s)
+    n_s = S // bs
+    q4 = q.reshape(B, Hkv, rep, hd)
+    if start is None:
+        start = jnp.zeros((B,), jnp.int32)
+    prefetch = jnp.concatenate(
+        [jnp.asarray(valid_len, jnp.int32).reshape(1),
+         jnp.asarray(start, jnp.int32).reshape(B)])
+    kernel = functools.partial(_decode_batched_kernel, block_s=bs, n_s=n_s,
+                               n_kv=Hkv, logit_cap=logit_cap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * Hkv, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd),
+                         lambda b, j, *_: (b // Hkv, b % Hkv, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd // 2),
+                         lambda b, j, *_: (b // Hkv, j, b % Hkv, 0)),
+            pl.BlockSpec((1, bs, 1, hd // GROUP),
+                         lambda b, j, *_: (b // Hkv, j, b % Hkv, 0)),
+            pl.BlockSpec((1, bs // 2, 1, hd),
+                         lambda b, j, *_: (b // Hkv, j, b % Hkv, 0)),
+            pl.BlockSpec((1, bs // GROUP, 1, hd),
+                         lambda b, j, *_: (b // Hkv, j, b % Hkv, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, rep, hd),
+                         lambda b, j, *_: (b // Hkv, b % Hkv, 0, 0)),
+            pl.BlockSpec((1, 1, rep, 1),
+                         lambda b, j, *_: (b // Hkv, b % Hkv, 0, 0)),
+            pl.BlockSpec((1, 1, rep, 1),
+                         lambda b, j, *_: (b // Hkv, b % Hkv, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rep, hd), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, rep, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, rep, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, rep, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(prefetch, q4, k_mant4, k_exp, v_mant4, v_exp)
+    return (o.reshape(B, H, hd), m.reshape(B, H, 1), l.reshape(B, H, 1))
+
+
+__all__ = ["bfp_attention_prefill_kernel", "bfp_attention_prefill_batched",
+           "bfp_attention_decode_kernel", "bfp_attention_decode_batched",
+           "prefill_tile_counts", "BLOCK_Q_BATCHED", "BLOCK_S_BATCHED",
+           "BLOCK_S_DECODE"]

@@ -3,6 +3,13 @@
 ``interpret`` defaults to True off-TPU so the same call sites run
 everywhere (CPU CI validates kernel numerics; TPU compiles the real
 Mosaic kernels).
+
+The attention wrappers default to the grid-fused batched kernels
+(one ``pallas_call`` over the (batch × kv-head) grid, zero layout
+copies).  ``legacy=True`` selects the original per-head kernels driven
+by ``jax.vmap`` towers plus four ``moveaxis`` transposes per call —
+kept as a numerical-comparison escape hatch and as the baseline for
+``benchmarks/kernels_micro.py``.
 """
 from __future__ import annotations
 
@@ -13,12 +20,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bfp
-from repro.kernels.bfp_attention import (bfp_attention_decode_kernel,
+from repro.kernels.bfp_attention import (BLOCK_Q_BATCHED, BLOCK_S_BATCHED,
+                                         BLOCK_S_DECODE,
+                                         bfp_attention_decode_batched,
+                                         bfp_attention_decode_kernel,
+                                         bfp_attention_prefill_batched,
                                          bfp_attention_prefill_kernel)
 from repro.kernels.bfp_matmul import bfp_matmul_kernel, choose_dataflow
 from repro.kernels.bfp_quant import bfp_quantize_kernel
 
 GROUP = 32
+
+# seed-era defaults of the per-head kernels, kept for the legacy path
+LEGACY_BLOCK_Q = 128
+LEGACY_BLOCK_S = 128
 
 
 def _default_interpret() -> bool:
@@ -38,12 +53,16 @@ def bfp_quantize(x, mantissa_bits: int = 8, rounding: str = "trunc",
             e.reshape(lead + (x.shape[-1] // GROUP,)))
 
 
-@partial(jax.jit, static_argnames=("mantissa_bits", "dataflow", "int_path",
-                                   "interpret"))
+@partial(jax.jit, static_argnames=("mantissa_bits", "dataflow", "block_k",
+                                   "int_path", "interpret"))
 def bfp_matmul(a_mant, a_exp, w_packed, w_scale, mantissa_bits: int = 8,
-               dataflow: str = "auto", int_path: bool = False,
+               dataflow: str = "auto", block_k: Optional[int] = None,
+               int_path: bool = False,
                interpret: Optional[bool] = None):
-    """Packed BFP-INT GEMM; leading activation dims are flattened to M."""
+    """Packed BFP-INT GEMM; leading activation dims are flattened to M.
+
+    ``block_k``: contraction tile for the K-blocked grid (VMEM-bounded
+    K); None keeps the whole contraction dim resident."""
     interpret = _default_interpret() if interpret is None else interpret
     lead = a_mant.shape[:-1]
     K = a_mant.shape[-1]
@@ -51,20 +70,23 @@ def bfp_matmul(a_mant, a_exp, w_packed, w_scale, mantissa_bits: int = 8,
     ae = a_exp.reshape(-1, K // GROUP)
     out = bfp_matmul_kernel(am, ae, w_packed, w_scale,
                             mantissa_bits=mantissa_bits, dataflow=dataflow,
-                            int_path=int_path, interpret=interpret)
+                            block_k=block_k, int_path=int_path,
+                            interpret=interpret)
     return out.reshape(lead + (w_packed.shape[-1],))
 
 
-@partial(jax.jit, static_argnames=("mantissa_bits", "dataflow", "interpret"))
+@partial(jax.jit, static_argnames=("mantissa_bits", "dataflow", "block_k",
+                                   "interpret"))
 def bfp_linear(x, w_packed, w_scale, mantissa_bits: int = 8,
-               dataflow: str = "auto", interpret: Optional[bool] = None):
+               dataflow: str = "auto", block_k: Optional[int] = None,
+               interpret: Optional[bool] = None):
     """Fused convenience: FP activations -> BFP (kernel) -> BFP-INT GEMM.
 
     This is the full Harmonia linear-layer path: the converter keeps x
     compressed between layers; the GEMM consumes packed operands."""
     am, ae = bfp_quantize(x, mantissa_bits, interpret=interpret)
     return bfp_matmul(am, ae, w_packed, w_scale, mantissa_bits,
-                      dataflow, interpret=interpret)
+                      dataflow, block_k, interpret=interpret)
 
 
 def quantize_v_token_grouped(v, mantissa_bits: int = 8):
@@ -76,25 +98,59 @@ def quantize_v_token_grouped(v, mantissa_bits: int = 8):
     return m, e.T
 
 
+def quantize_v_token_grouped_batched(v, mantissa_bits: int = 8):
+    """(B, S, Hkv, hd) fp -> token-grouped packed V in the batched kernel
+    layout: (mant (B, S, Hkv, hd), exp (B, S/32, Hkv, hd))."""
+    B, S, Hkv, hd = v.shape
+    m, e = bfp.bfp_quantize(v, GROUP, mantissa_bits, axis=1)
+    # token axis moved last: m (B, Hkv, hd, S/32, 32), e (B, Hkv, hd, S/32)
+    m = jnp.moveaxis(m.reshape(B, Hkv, hd, S), -1, 1)
+    e = jnp.moveaxis(e, -1, 1)
+    return m, e
+
+
 @partial(jax.jit, static_argnames=("mantissa_bits", "causal", "logit_cap",
-                                   "window", "interpret"))
+                                   "window", "legacy", "block_q", "block_s",
+                                   "interpret"))
 def bfp_attention_prefill(q, k_mant, k_exp, v_mant, v_exp,
                           mantissa_bits: int = 8, causal: bool = True,
                           logit_cap: float = 0.0, window: int = 0,
+                          legacy: bool = False,
+                          block_q: Optional[int] = None,
+                          block_s: Optional[int] = None,
                           interpret: Optional[bool] = None):
     """Batched GQA prefill attention on packed K/V.
 
     q: (B, S, H, hd); K: (B, S, Hkv, hd)+(B, S, Hkv, hd/32);
     V token-grouped: (B, S, Hkv, hd)+(B, S/32, Hkv, hd).
-    Returns (B, S, H, hd) f32."""
+    Returns (B, S, H, hd) f32.
+
+    Default path: one grid-fused ``pallas_call`` (grid (B·Hkv, S/bq,
+    S/bs), rep folded into the q tile, causal tiles skipped).
+    ``legacy=True``: the original per-head kernel under a triple vmap
+    tower with moveaxis layout copies."""
     interpret = _default_interpret() if interpret is None else interpret
     B, S, H, hd = q.shape
     Hkv = k_mant.shape[2]
     rep = H // Hkv
 
+    if not legacy:
+        # scale the default q tile down by the folded query group: the
+        # (bq*rep, bs) score tile and (bq*rep, hd) accumulator grow with
+        # rep, and high-rep GQA/MQA configs (rep 12-16) would otherwise
+        # blow the TPU VMEM budget at the 512 default
+        bq_default = max(BLOCK_Q_BATCHED // rep, 128)
+        return bfp_attention_prefill_batched(
+            q, k_mant, k_exp, v_mant, v_exp, mantissa_bits=mantissa_bits,
+            causal=causal, logit_cap=logit_cap, window=window,
+            block_q=block_q or bq_default,
+            block_s=block_s or BLOCK_S_BATCHED, interpret=interpret)
+
     single = partial(bfp_attention_prefill_kernel,
                      mantissa_bits=mantissa_bits, causal=causal,
                      logit_cap=logit_cap, window=window,
+                     block_q=block_q or LEGACY_BLOCK_Q,
+                     block_s=block_s or LEGACY_BLOCK_S,
                      interpret=interpret)
     # vmap: rep (q only) -> kv head -> batch
     f = jax.vmap(single, in_axes=(0, None, None, None, None))
@@ -109,20 +165,42 @@ def bfp_attention_prefill(q, k_mant, k_exp, v_mant, v_exp,
     return jnp.moveaxis(o, 3, 1).reshape(B, S, H, hd)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
+@partial(jax.jit, static_argnames=("logit_cap", "legacy", "block_s",
+                                   "interpret"))
 def bfp_attention_decode_bulk(q, k_mant4, k_exp, v_mant4, v_exp, valid_len,
+                              start=None, logit_cap: float = 0.0,
+                              legacy: bool = False,
+                              block_s: Optional[int] = None,
                               interpret: Optional[bool] = None):
     """Batched GQA decode over the 4-bit bulk cache region.
 
     q: (B, H, hd) (one token); k_mant4: (B, S, Hkv, hd/2);
     k_exp: (B, S, Hkv, hd/32); v_mant4: (B, S/2, Hkv, hd);
-    v_exp: (B, S/32, Hkv, hd); valid_len: () int32.
-    Returns flash triple (o (B,H,hd), m (B,H,1), l (B,H,1))."""
+    v_exp: (B, S/32, Hkv, hd); valid_len: () int32;
+    start: optional (B,) int32 first valid slot per row (left-pad mask —
+    fused path only).
+    Returns flash triple (o (B,H,hd), m (B,H,1), l (B,H,1)).
+
+    Default path: one grid-fused ``pallas_call`` over (B·Hkv, S/bs) with
+    dead key tiles skipped.  ``legacy=True``: per-head kernel under a
+    double vmap tower."""
     interpret = _default_interpret() if interpret is None else interpret
     B, H, hd = q.shape
     Hkv = k_mant4.shape[2]
     rep = H // Hkv
-    single = partial(bfp_attention_decode_kernel, interpret=interpret)
+
+    if not legacy:
+        return bfp_attention_decode_batched(
+            q, k_mant4, k_exp, v_mant4, v_exp, valid_len, start=start,
+            logit_cap=logit_cap, block_s=block_s or BLOCK_S_DECODE,
+            interpret=interpret)
+
+    if start is not None:
+        raise ValueError("per-row start masking requires the fused path")
+    if logit_cap > 0:
+        raise ValueError("logit_cap requires the fused path")
+    single = partial(bfp_attention_decode_kernel, interpret=interpret,
+                     **({"block_s": block_s} if block_s else {}))
     f = jax.vmap(single, in_axes=(0, 0, 0, 0, 0, None))      # kv heads
     f = jax.vmap(f, in_axes=(0, 0, 0, 0, 0, None))           # batch
     qg = q.reshape(B, Hkv, rep, hd)
@@ -136,4 +214,5 @@ def bfp_attention_decode_bulk(q, k_mant4, k_exp, v_mant4, v_exp, valid_len,
 
 __all__ = ["bfp_quantize", "bfp_matmul", "bfp_linear",
            "bfp_attention_prefill", "bfp_attention_decode_bulk",
-           "quantize_v_token_grouped", "choose_dataflow"]
+           "quantize_v_token_grouped", "quantize_v_token_grouped_batched",
+           "choose_dataflow"]

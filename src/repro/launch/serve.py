@@ -23,6 +23,9 @@ def main():
     ap.add_argument("--recipe", default="harmonia_kv4")
     ap.add_argument("--ckpt")
     ap.add_argument("--sampler", default="greedy")
+    ap.add_argument("--pallas", action="store_true",
+                    help="serve through the grid-fused Pallas kernels "
+                         "(prefill + 4-bit bulk decode)")
     args = ap.parse_args()
 
     import jax
@@ -47,7 +50,8 @@ def main():
 
     eng = Engine(params, cfg, EngineConfig(
         max_seq=args.max_seq, max_new_tokens=args.max_new,
-        quant=get_recipe(args.recipe), sampler=args.sampler))
+        quant=get_recipe(args.recipe), sampler=args.sampler,
+        use_pallas_kernels=args.pallas))
     out = eng.generate(args.prompts)
     for p, t in zip(args.prompts, out["texts"]):
         print(f"[serve] {p!r} -> {t!r}")

@@ -292,22 +292,174 @@ def attention_eval_quant(q: jax.Array, k: jax.Array, v: jax.Array,
     return _apply_scores_v(p_hi, v_hi) + _apply_scores_v(p_lo, v_lo)
 
 
+def attention_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                             causal: bool = True, window: int = 0,
+                             logit_cap: float = 0.0,
+                             quant: Optional[QuantConfig] = None,
+                             interpret: Optional[bool] = None) -> jax.Array:
+    """Prefill attention through the grid-fused Pallas kernel.
+
+    q: (B,S,H,hd); k, v: (B,S,Hkv,hd) fresh (post-RoPE) values.  K/V are
+    materialized as packed BFP (K per-token groups along hd, V token
+    groups — the paper's Fig. 6a sites) and consumed compressed by one
+    batched ``pallas_call`` over the (B·Hkv, S/bq, S/bs) grid.  Unlike
+    ``attention_forward`` the post-softmax P stays fp32 inside the kernel
+    (DESIGN.md §2), so this is the serving path, not the fake-quant
+    accuracy path.  Requires S % 32 == 0 (the V token-group layout).
+    """
+    from repro.kernels import ops as kernel_ops
+    bits = (quant.act_mantissa_bits
+            if quant is not None and quant.enabled and quant.quant_attention
+            else 8)
+    q = _quant_qk(q, quant)
+    km, ke = kernel_ops.bfp_quantize(k.astype(jnp.float32), bits,
+                                     interpret=interpret)
+    vm, ve = kernel_ops.quantize_v_token_grouped_batched(
+        v.astype(jnp.float32), bits)
+    return kernel_ops.bfp_attention_prefill(
+        q.astype(jnp.float32), km, ke, vm, ve, mantissa_bits=bits,
+        causal=causal, logit_cap=logit_cap, window=window,
+        interpret=interpret)
+
+
+def _decode_packed_pallas(q: jax.Array, cache: kvcache.AsymKVCache, *,
+                          logit_cap: float,
+                          quant: Optional[QuantConfig],
+                          extra_invalid_prefix: Optional[jax.Array],
+                          interpret: Optional[bool]) -> jax.Array:
+    """Kernel-backed decode: the 4-bit bulk region goes through the
+    grid-fused Pallas kernel; the small 8-bit init/local/residual regions
+    are handled by an XLA epilogue and merged via the flash triple.
+
+    Region split at length L (cg = L//32):
+      * bulk (kernel): tokens [32, 32·(cg-2)) — the common range where
+        both K and V are already demoted to 4-bit,
+      * epilogue: init tokens [0, 32) plus the recent window
+        [32·max(cg-2, 1), L) (< 96 tokens) — K from the local ring and
+        the freshly-demoted bulk band, V from the local group ring and
+        the residual group (re-converted at its current size).
+    """
+    from repro.kernels import ops as kernel_ops
+    B, _, H, hd = q.shape
+    Hkv = cache.k_init_mant.shape[2]
+    rep = H // Hkv
+    G, INIT, LOCAL = kvcache.GROUP, kvcache.INIT_TOKENS, kvcache.LOCAL_TOKENS
+    L = cache.length
+    cg = L // G
+    q = _quant_qk(q, quant).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(float(hd))
+
+    # ---- bulk region through the fused kernel ----
+    vl_bulk = jnp.maximum(G * (cg - 2) - INIT, 0)          # valid bulk slots
+    start = None
+    if extra_invalid_prefix is not None:
+        start = jnp.maximum(extra_invalid_prefix.astype(jnp.int32) - INIT, 0)
+    # v_bulk_exp stores group g at slot g; the kernel indexes exponents by
+    # bulk-relative group (g-1) — shift down and pad a dead tail slot
+    ve_bulk = jnp.concatenate(
+        [cache.v_bulk_exp[:, 1:],
+         jnp.zeros_like(cache.v_bulk_exp[:, :1])], axis=1)
+    o_b, m_b, l_b = kernel_ops.bfp_attention_decode_bulk(
+        q[:, 0], cache.k_bulk_mant, cache.k_bulk_exp,
+        cache.v_bulk_mant, ve_bulk, vl_bulk, start=start,
+        logit_cap=logit_cap, interpret=interpret)
+
+    # ---- epilogue: init region + recent window ----
+    k_init = kvcache._dq_k(cache.k_init_mant, cache.k_init_exp, 8)
+    v_init = kvcache._dq_v_group(cache.v_init_mant, cache.v_init_exp, 8)
+
+    W = LOCAL + G                                          # 96-slot window
+    R0 = G * jnp.maximum(cg - 2, 1)
+    t_win = R0 + jnp.arange(W)                             # absolute tokens
+    # K: local ring for the last LOCAL tokens, bulk band for the rest
+    use_local = t_win >= jnp.maximum(INIT, L - LOCAL)
+    k_loc = kvcache._dq_k(cache.k_local_mant, cache.k_local_exp, 8)
+    k_from_local = k_loc[:, (t_win - INIT) % LOCAL]
+    s_bulk = cache.k_bulk_mant.shape[1]
+    b0 = jnp.clip(R0 - INIT, 0, s_bulk - W)
+    kb_m = jax.lax.dynamic_slice_in_dim(cache.k_bulk_mant, b0, W, axis=1)
+    kb_e = jax.lax.dynamic_slice_in_dim(cache.k_bulk_exp, b0, W, axis=1)
+    k_band = kvcache._dq_k(bfp.unpack_int4(kb_m, axis=-1), kb_e, 4)
+    k_from_bulk = k_band[:, jnp.clip(t_win - INIT - b0, 0, W - 1)]
+    k_win = jnp.where(use_local[None, :, None, None], k_from_local,
+                      k_from_bulk)
+    # V: groups a, a+1, a+2 from the local group ring / residual group
+    v_loc = kvcache._dq_v_group(cache.v_local_mant, cache.v_local_exp, 8)
+    r = L % G
+    resid = jnp.where((jnp.arange(G) < r)[None, :, None, None],
+                      cache.v_resid.astype(jnp.float32), 0.0)
+    resid_q = bfp.bfp_fake_quant(resid, G, 8, "trunc", axis=1)
+    a0 = jnp.maximum(cg - 2, 1)
+    v_parts = []
+    for off in range(W // G):
+        gg = a0 + off
+        from_ring = jnp.where(gg % kvcache.V_LOCAL_GROUPS == 0,
+                              v_loc[:, :G], v_loc[:, G:2 * G])
+        v_parts.append(jnp.where(gg == cg, resid_q, from_ring))
+    v_win = jnp.concatenate(v_parts, axis=1)               # (B, 96, Hkv, hd)
+
+    k_ep = jnp.concatenate([k_init, k_win], axis=1)        # (B, 32+96, ..)
+    v_ep = jnp.concatenate([v_init, v_win], axis=1)
+    pos_ep = jnp.concatenate([jnp.arange(INIT), t_win])
+    valid_ep = pos_ep[None, :] < L
+    if extra_invalid_prefix is not None:
+        valid_ep = valid_ep & (pos_ep[None, :]
+                               >= extra_invalid_prefix[:, None])
+
+    s_e = _group_heads(q, k_ep) * scale                    # (B,Hkv,rep,1,T)
+    if logit_cap > 0:
+        s_e = _softcap(s_e, logit_cap)
+    s_e = jnp.where(valid_ep[:, None, None, None], s_e, -1e30)
+    m_e = jnp.max(s_e, axis=-1)                            # (B,Hkv,rep,1)
+    p_e = jnp.where(valid_ep[:, None, None, None],
+                    jnp.exp(s_e - m_e[..., None]), 0.0)
+    l_e = jnp.sum(p_e, axis=-1)
+    o_e = jnp.einsum("bgrst,btgd->bgrsd", p_e, v_ep,
+                     preferred_element_type=jnp.float32)[:, :, :, 0]
+
+    # ---- merge the two flash triples ----
+    m_e, l_e = m_e[..., 0], l_e[..., 0]                    # (B,Hkv,rep)
+    o_b = o_b.reshape(B, Hkv, rep, hd)
+    m_b = m_b.reshape(B, Hkv, rep)
+    l_b = l_b.reshape(B, Hkv, rep)
+    m = jnp.maximum(m_e, m_b)
+    a_e = jnp.exp(m_e - m)
+    a_b = jnp.exp(m_b - m)
+    l = l_e * a_e + l_b * a_b
+    o = o_e * a_e[..., None] + o_b * a_b[..., None]
+    out = jnp.where(l[..., None] > 0,
+                    o / jnp.maximum(l[..., None], 1e-30), 0.0)
+    return out.reshape(B, 1, H, hd)
+
+
 def attention_decode_packed(q: jax.Array, cache: kvcache.AsymKVCache, *,
                             logit_cap: float = 0.0,
                             quant: Optional[QuantConfig] = None,
                             extra_invalid_prefix: Optional[jax.Array] = None,
                             seq_shard: bool = False,
-                            dp_axes: tuple = ("data",)) -> jax.Array:
+                            dp_axes: tuple = ("data",),
+                            use_pallas: bool = False,
+                            interpret: Optional[bool] = None) -> jax.Array:
     """One-token decode: q (B,1,H,hd) against the packed asymmetric cache.
 
     ``extra_invalid_prefix``: optional (B,) count of left-pad positions to
     mask out (serving engine).  Returns (B,1,H,hd).
 
-    The cache dequantizes to bf16 (mantissas <= 8 bits are exactly
-    representable; the 2^e scales are exact) — halves decode HBM traffic
-    vs f32 (§Perf iteration 3); scores still accumulate in f32.
+    ``use_pallas=True`` routes the bandwidth-critical 4-bit bulk region
+    through the grid-fused Pallas decode kernel and merges the small
+    8-bit regions via an XLA flash epilogue (note: P stays fp32 on that
+    path, so ``quant.quant_attention`` P-quantization is not applied).
+
+    The default XLA path dequantizes the cache to bf16 (mantissas <= 8
+    bits are exactly representable; the 2^e scales are exact) — halves
+    decode HBM traffic vs f32 (§Perf iteration 3); scores still
+    accumulate in f32.
     """
     hd = q.shape[-1]
+    if use_pallas and not seq_shard:
+        return _decode_packed_pallas(
+            q, cache, logit_cap=logit_cap, quant=quant,
+            extra_invalid_prefix=extra_invalid_prefix, interpret=interpret)
     q = _quant_qk(q, quant)
     k, v, valid = kvcache.gather_kv(cache, dtype=jnp.bfloat16)
     if seq_shard:
@@ -445,6 +597,7 @@ def ring_decode_attention(q: jax.Array, cache: RingKVCache, *,
 
 
 __all__ = ["attention_forward", "attention_eval_quant",
-           "attention_decode_packed", "make_mask", "RingKVCache",
+           "attention_prefill_pallas", "attention_decode_packed",
+           "make_mask", "RingKVCache",
            "init_ring_cache", "ring_prefill", "ring_append",
            "ring_decode_attention", "compute_online_offsets"]

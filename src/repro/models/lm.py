@@ -45,6 +45,8 @@ class Ctx:
     pad_prefix: Any = None         # (B,) left-pad counts for decode masks
     seq_shard: bool = False        # Megatron-SP-style constraints (dry-run
     dp_axes: tuple = ("data",)     # + production meshes only)
+    use_pallas: bool = False       # grid-fused Pallas kernels on the
+                                   # prefill/decode global-attn hot paths
 
 
 def _c(x, ctx: Ctx, *spec):
@@ -153,10 +155,19 @@ def _attn_block(h, p, kind: str, cfg: ModelConfig,
                 logit_cap=cfg.attn_logit_softcap, quant=quant,
                 k_valid=ctx.k_valid)
     elif ctx.mode == "prefill":
-        attn = attn_lib.attention_forward(
-            q, k, v, ctx.positions, mask_kind=mask_kind, window=window,
-            logit_cap=cfg.attn_logit_softcap, quant=quant,
-            k_valid=ctx.k_valid)
+        # grid-fused Pallas path: engine-style causal prefill (arange
+        # positions, no padding mask, un-sharded) on the global-attn kind
+        if (ctx.use_pallas and kind == "attn" and not ctx.bidir
+                and ctx.k_valid is None and not ctx.seq_shard
+                and S % 32 == 0 and cfg.head_dim % 32 == 0):
+            attn = attn_lib.attention_prefill_pallas(
+                q, k, v, causal=True, logit_cap=cfg.attn_logit_softcap,
+                quant=quant)
+        else:
+            attn = attn_lib.attention_forward(
+                q, k, v, ctx.positions, mask_kind=mask_kind, window=window,
+                logit_cap=cfg.attn_logit_softcap, quant=quant,
+                k_valid=ctx.k_valid)
         if kind == "attn":
             off = None
             if online:
@@ -179,7 +190,8 @@ def _attn_block(h, p, kind: str, cfg: ModelConfig,
             attn = attn_lib.attention_decode_packed(
                 q, new_cache, logit_cap=cfg.attn_logit_softcap, quant=quant,
                 extra_invalid_prefix=ctx.pad_prefix,
-                seq_shard=ctx.seq_shard, dp_axes=ctx.dp_axes)
+                seq_shard=ctx.seq_shard, dp_axes=ctx.dp_axes,
+                use_pallas=ctx.use_pallas)
         else:
             new_cache = attn_lib.ring_append(cache, k[:, 0], v[:, 0])
             attn = attn_lib.ring_decode_attention(
@@ -418,7 +430,8 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, *,
             max_seq: int, quant: Optional[QuantConfig] = None,
             frontend_embeds: Optional[jax.Array] = None,
             k_valid: Optional[jax.Array] = None, unroll: bool = False,
-            seq_shard: bool = False, dp_axes: tuple = ("data",)):
+            seq_shard: bool = False, dp_axes: tuple = ("data",),
+            use_pallas: bool = False):
     """Returns (logits_last (B, V), caches)."""
     B, S = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
@@ -434,7 +447,7 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, *,
 
     ctx = Ctx(mode="prefill", positions=positions, enc_out=enc_out,
               max_seq=max_seq, k_valid=k_valid, seq_shard=seq_shard,
-              dp_axes=dp_axes)
+              dp_axes=dp_axes, use_pallas=use_pallas)
     h, caches = _run_stack(h, params["blocks"], cfg, quant, ctx,
                            unroll=unroll)
     caches["_pos"] = jnp.asarray(h.shape[1], jnp.int32)
@@ -446,14 +459,14 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, caches, *,
                 quant: Optional[QuantConfig] = None,
                 pad_prefix: Optional[jax.Array] = None,
                 unroll: bool = False, seq_shard: bool = False,
-                dp_axes: tuple = ("data",)):
+                dp_axes: tuple = ("data",), use_pallas: bool = False):
     """token: (B,) -> (logits (B, V), new caches)."""
     B = token.shape[0]
     t = caches["_pos"]
     positions = jnp.broadcast_to(t[None, None], (B, 1)).astype(jnp.int32)
     h = _embed(params, cfg, token[:, None], positions)
     ctx = Ctx(mode="decode", positions=positions, pad_prefix=pad_prefix,
-              seq_shard=seq_shard, dp_axes=dp_axes)
+              seq_shard=seq_shard, dp_axes=dp_axes, use_pallas=use_pallas)
     h, new_caches = _run_stack(h, params["blocks"], cfg, quant, ctx, caches,
                                unroll=unroll)
     new_caches["_pos"] = t + 1

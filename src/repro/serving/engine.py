@@ -42,6 +42,12 @@ class EngineConfig:
     sampler: str = "greedy"
     temperature: float = 0.8
     seed: int = 0
+    # Route global-attention prefill and the 4-bit bulk decode region
+    # through the grid-fused Pallas kernels (one pallas_call over the
+    # (batch x kv-head) grid with causal/dead tile skipping) instead of
+    # the XLA dequantize-and-attend paths.  Off by default: the XLA path
+    # keeps the fake-quant P numerics used by the accuracy benchmarks.
+    use_pallas_kernels: bool = False
 
 
 class Engine:
@@ -53,11 +59,12 @@ class Engine:
         self.tok = ByteTokenizer()
         self._prefill = jax.jit(
             lambda p, t: lm.prefill(p, cfg, t, max_seq=ecfg.max_seq,
-                                    quant=self.quant))
+                                    quant=self.quant,
+                                    use_pallas=ecfg.use_pallas_kernels))
         self._decode = jax.jit(
-            lambda p, t, c, pp: lm.decode_step(p, cfg, t, c,
-                                               quant=self.quant,
-                                               pad_prefix=pp))
+            lambda p, t, c, pp: lm.decode_step(
+                p, cfg, t, c, quant=self.quant, pad_prefix=pp,
+                use_pallas=ecfg.use_pallas_kernels))
         self._sample: Callable = {
             "greedy": lambda lg, key: sampler_lib.greedy(lg),
             "temperature": lambda lg, key: sampler_lib.temperature(

@@ -103,3 +103,101 @@ def test_decode_packed_matches_eval_quant_early():
     # decode path runs bf16 (dequantized mantissas are bf16-exact; the
     # unquantized test q loses bits in the cast) — tolerance reflects that
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# Pallas-backed serving paths (grid-fused kernels)
+# ---------------------------------------------------------------------------
+
+from repro.core import bfp, kvcache
+
+
+def _decode_ref_f32(q, cache, logit_cap=0.0, prefix=None):
+    """f32 gather-everything reference for the packed decode (the
+    production XLA path dequantizes to bf16; the Pallas path is f32)."""
+    hd = q.shape[-1]
+    k, v, valid = kvcache.gather_kv(cache, dtype=jnp.float32)
+    scores = A._group_heads(q.astype(jnp.float32), k) / jnp.sqrt(float(hd))
+    m = valid[None, :]
+    if prefix is not None:
+        pos = jnp.arange(k.shape[1])[None, :]
+        m = m & (pos >= prefix[:, None])
+    p = A._masked_softmax(scores, m[:, None, None, None], logit_cap)
+    return A._apply_scores_v(p, v)
+
+
+def _build_cache(B, Hkv, hd, max_seq, S_pre, n_append):
+    cache = kvcache.init_cache(B, Hkv, hd, max_seq)
+    k = jnp.asarray(RNG.normal(size=(B, S_pre, Hkv, hd)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(B, S_pre, Hkv, hd)).astype(np.float32))
+    cache = kvcache.prefill_cache(cache, k, v)
+    for _ in range(n_append):
+        kn = jnp.asarray(RNG.normal(size=(B, Hkv, hd)).astype(np.float32))
+        vn = jnp.asarray(RNG.normal(size=(B, Hkv, hd)).astype(np.float32))
+        cache = kvcache.append_token(cache, kn, vn)
+    return cache
+
+
+@pytest.mark.parametrize("S_pre,n_append,cap",
+                         [(128, 0, 0.0),    # bulk exactly at region edge
+                          (128, 5, 0.0),    # residual group active
+                          (256, 37, 0.0),   # deep bulk + residual
+                          (96, 0, 0.0),     # bulk empty, window ragged
+                          (64, 3, 0.0),     # local ring only
+                          (32, 1, 0.0),     # init + one token
+                          (256, 0, 30.0)])  # logit softcap
+def test_decode_packed_pallas_matches_f32_reference(S_pre, n_append, cap):
+    B, Hkv, H, hd = 2, 2, 4, 64
+    cache = _build_cache(B, Hkv, hd, 512, S_pre, n_append)
+    q = jnp.asarray(RNG.normal(size=(B, 1, H, hd)).astype(np.float32))
+    out_p = A.attention_decode_packed(q, cache, logit_cap=cap,
+                                      use_pallas=True)
+    out_r = _decode_ref_f32(q, cache, cap)
+    rel = (float(jnp.abs(out_p - out_r).max())
+           / float(jnp.abs(out_r).max()))
+    assert rel < 1e-5, rel
+
+
+def test_decode_packed_pallas_left_pad_prefix():
+    B, Hkv, H, hd = 2, 2, 4, 64
+    cache = _build_cache(B, Hkv, hd, 512, 192, 70)
+    q = jnp.asarray(RNG.normal(size=(B, 1, H, hd)).astype(np.float32))
+    prefix = jnp.asarray([0, 40], jnp.int32)
+    out_p = A.attention_decode_packed(q, cache, extra_invalid_prefix=prefix,
+                                      use_pallas=True)
+    out_r = _decode_ref_f32(q, cache, prefix=prefix)
+    rel = (float(jnp.abs(out_p - out_r).max())
+           / float(jnp.abs(out_r).max()))
+    assert rel < 1e-5, rel
+
+
+def test_decode_packed_pallas_close_to_xla_path():
+    """The bf16 XLA path and the f32 Pallas path agree to bf16 P
+    resolution."""
+    B, Hkv, H, hd = 2, 2, 4, 64
+    cache = _build_cache(B, Hkv, hd, 512, 256, 10)
+    q = jnp.asarray(RNG.normal(size=(B, 1, H, hd)).astype(np.float32))
+    out_p = A.attention_decode_packed(q, cache, use_pallas=True)
+    out_x = A.attention_decode_packed(q, cache, use_pallas=False)
+    assert float(jnp.abs(out_p - out_x).max()) < 0.05
+
+
+def test_prefill_pallas_matches_fakequant_forward():
+    """The kernel path == attention_forward on pre-fake-quantized K/V
+    (packed dequantization is exact), up to flash accumulation order."""
+    B, S, H, Hkv, hd = 2, 128, 4, 2, 64
+    q, k, v, pos = _qkv(B, S, H, Hkv, hd)
+    out_k = A.attention_prefill_pallas(q, k, v)
+    k_fq = bfp.bfp_fake_quant(k, 32, 8, "trunc", axis=-1)
+    v_fq = bfp.bfp_fake_quant(v, 32, 8, "trunc", axis=1)
+    out_r = A.attention_forward(q, k_fq, v_fq, pos)
+    rel = (float(jnp.abs(out_k - out_r).max())
+           / float(jnp.abs(out_r).max()))
+    assert rel < 1e-5, rel
+
+
+def test_prefill_pallas_gqa_quant_config():
+    q, k, v, _ = _qkv(1, 96, 8, 2, 64)
+    out = A.attention_prefill_pallas(q, k, v, quant=harmonia(4))
+    assert out.shape == q.shape
+    assert not bool(jnp.isnan(out).any())

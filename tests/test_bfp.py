@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional test dep (pyproject `test` extra); unit tests run without
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
 
 from repro.core import bfp
 
@@ -81,28 +85,34 @@ def test_padding_of_ragged_axis():
     assert jnp.allclose(fq, x, atol=1e-2)
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(2, 10),
-       st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
-                min_size=32, max_size=32))
-def test_hypothesis_error_bound(m_bits, vals):
-    x = jnp.asarray(np.array(vals, np.float32))[None, :]
-    fq = bfp.bfp_fake_quant(x, 32, m_bits)
-    absmax = float(jnp.max(jnp.abs(x)))
-    if absmax == 0:
-        assert jnp.all(fq == 0)
-        return
-    E = np.clip(np.floor(np.log2(absmax)), bfp.EXP_MIN, bfp.EXP_MAX)
-    step = 2.0 ** (E - (m_bits - 2))
-    assert float(jnp.max(jnp.abs(x - fq))) <= step * (1 + 1e-5) + 1e-6
+if given is not None:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 10),
+           st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
+                    min_size=32, max_size=32))
+    def test_hypothesis_error_bound(m_bits, vals):
+        x = jnp.asarray(np.array(vals, np.float32))[None, :]
+        fq = bfp.bfp_fake_quant(x, 32, m_bits)
+        absmax = float(jnp.max(jnp.abs(x)))
+        if absmax == 0:
+            assert jnp.all(fq == 0)
+            return
+        E = np.clip(np.floor(np.log2(absmax)), bfp.EXP_MIN, bfp.EXP_MAX)
+        step = 2.0 ** (E - (m_bits - 2))
+        assert float(jnp.max(jnp.abs(x - fq))) <= step * (1 + 1e-5) + 1e-6
 
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_hypothesis_pack_roundtrip(seed):
+        rng = np.random.default_rng(seed)
+        m = jnp.asarray(rng.integers(-8, 8, size=(2, 32)), jnp.int8)
+        assert jnp.all(bfp.unpack_int4(bfp.pack_int4(m, -1), -1) == m)
+else:
+    def test_hypothesis_error_bound():
+        pytest.importorskip("hypothesis")
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 2**31 - 1))
-def test_hypothesis_pack_roundtrip(seed):
-    rng = np.random.default_rng(seed)
-    m = jnp.asarray(rng.integers(-8, 8, size=(2, 32)), jnp.int8)
-    assert jnp.all(bfp.unpack_int4(bfp.pack_int4(m, -1), -1) == m)
+    def test_hypothesis_pack_roundtrip():
+        pytest.importorskip("hypothesis")
 
 
 def test_storage_accounting():

@@ -67,3 +67,30 @@ def test_sampler_top_k():
     toks = [int(top_k(logits, jax.random.PRNGKey(i), k=2)[0])
             for i in range(20)]
     assert set(toks) <= {1, 2}
+
+
+def test_pallas_kernel_path_matches_xla(engine):
+    """use_pallas_kernels routes prefill + bulk decode through the
+    grid-fused Pallas kernels.  The kernel path keeps P fp32 (the XLA
+    path BFP-quantizes P under harmonia recipes — DESIGN.md §2), so
+    logits agree to P-quant resolution rather than bit-exactly."""
+    params = engine.params
+    e_pal = Engine(params, CFG, EngineConfig(max_seq=256, max_new_tokens=8,
+                                             use_pallas_kernels=True))
+    prompts = ["hello", "world longer prompt"]
+    toks, pad_prefix = e_pal._prepare(prompts)
+    lg_x, caches_x = engine._prefill(params, toks)
+    lg_p, caches_p = e_pal._prefill(params, toks)
+    rel = (float(jnp.abs(lg_p - lg_x).max())
+           / float(jnp.abs(lg_x).max()))
+    assert rel < 0.05, rel
+    # one decode step on the same cache: same packed cache + pad masking
+    tok = jnp.argmax(lg_x, -1)
+    dg_x, _ = engine._decode(params, tok, caches_x, pad_prefix)
+    dg_p, _ = e_pal._decode(params, tok, caches_x, pad_prefix)
+    rel_d = (float(jnp.abs(dg_p - dg_x).max())
+             / float(jnp.abs(dg_x).max()))
+    assert rel_d < 0.05, rel_d
+    # the full pallas pipeline generates cleanly
+    out_p = e_pal.generate(prompts)
+    assert out_p["tokens"].shape == (2, 8)

@@ -5,7 +5,12 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:  # optional test dep (pyproject `test` extra); unit tests run without
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
 
 from repro.core import bfp
 from repro.core.quant_config import harmonia, get_recipe
@@ -67,34 +72,40 @@ def test_decode_matches_forward_tail():
     assert float(jnp.abs(lg2 - full[:, -1]).max()) < 0.3
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 6, 8]))
-def test_hypothesis_cache_policy_error_monotone(seed, bits):
-    """System invariant: per-tensor KV error shrinks with mantissa bits,
-    for any input."""
-    rng = np.random.default_rng(seed)
-    k = jnp.asarray(rng.normal(size=(1, 96, 1, 32)).astype(np.float32))
-    v = jnp.asarray(rng.normal(size=(1, 96, 1, 32)).astype(np.float32))
-    from repro.core.kvcache import fake_quant_kv
-    from repro.core.quant_config import KvQuantConfig
-    e = {}
-    for b in (bits, 8):
-        kq, vq = fake_quant_kv(k, v, KvQuantConfig(
-            mantissa_bits=b, high_mantissa_bits=b, asymmetric=False))
-        e[b] = float(jnp.abs(k - kq).mean() + jnp.abs(v - vq).mean())
-    assert e[8] <= e[bits] + 1e-7
+if given is not None:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([4, 6, 8]))
+    def test_hypothesis_cache_policy_error_monotone(seed, bits):
+        """System invariant: per-tensor KV error shrinks with mantissa
+        bits, for any input."""
+        rng = np.random.default_rng(seed)
+        k = jnp.asarray(rng.normal(size=(1, 96, 1, 32)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(1, 96, 1, 32)).astype(np.float32))
+        from repro.core.kvcache import fake_quant_kv
+        from repro.core.quant_config import KvQuantConfig
+        e = {}
+        for b in (bits, 8):
+            kq, vq = fake_quant_kv(k, v, KvQuantConfig(
+                mantissa_bits=b, high_mantissa_bits=b, asymmetric=False))
+            e[b] = float(jnp.abs(k - kq).mean() + jnp.abs(v - vq).mean())
+        assert e[8] <= e[bits] + 1e-7
 
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_hypothesis_packed_weights_function_preserving(seed):
+        """pack_params changes weights by at most the int4 grid step."""
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(128, 16)).astype(np.float32))
+        from repro.quant.int4 import quantize_weight
+        from repro.layers.common import weight_dequant
+        deq = weight_dequant(quantize_weight(w, 128), jnp.float32)
+        gmax = np.abs(np.asarray(w)).reshape(1, 128, 16).max(axis=1)
+        step = gmax / 7.0
+        assert np.all(np.abs(np.asarray(w - deq)).reshape(1, 128, 16)
+                      <= step[:, None] * 0.5 + 1e-6)
+else:
+    def test_hypothesis_cache_policy_error_monotone():
+        pytest.importorskip("hypothesis")
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 2**31 - 1))
-def test_hypothesis_packed_weights_function_preserving(seed):
-    """pack_params changes weights by at most the int4 grid step."""
-    rng = np.random.default_rng(seed)
-    w = jnp.asarray(rng.normal(size=(128, 16)).astype(np.float32))
-    from repro.quant.int4 import quantize_weight
-    from repro.layers.common import weight_dequant
-    deq = weight_dequant(quantize_weight(w, 128), jnp.float32)
-    gmax = np.abs(np.asarray(w)).reshape(1, 128, 16).max(axis=1)
-    step = gmax / 7.0
-    assert np.all(np.abs(np.asarray(w - deq)).reshape(1, 128, 16)
-                  <= step[:, None] * 0.5 + 1e-6)
+    def test_hypothesis_packed_weights_function_preserving():
+        pytest.importorskip("hypothesis")
