@@ -1,0 +1,176 @@
+"""Decode throughput: fused on-device generation loop vs the legacy
+per-step host loop, at serving shapes.
+
+Old vs new, like ``kernels_micro``'s legacy escape hatches:
+
+  * host loop (baseline) — the pre-fused-loop serving path: one
+    ``jax.jit`` dispatch per token (no cache donation, so every step
+    materializes a second packed cache), the select-based
+    ``append_token_select`` + scatter-based ``gather_kv_select`` cache
+    ops (``legacy_cache=True``), and an eager host-side sample and PRNG
+    split between steps.
+  * fused loop — ``lm.generate_loop``: the whole generation is a single
+    jitted ``lax.scan`` with the cache donated and mutated in place via
+    predicated writes, and the overlay-based gather.
+
+Both paths compute bit-identical values (the legacy cache ops differ
+only in data movement), so greedy outputs are asserted bit-exact
+(EOS-truncated: the fused loop freezes finished rows).
+
+The model is a small attention-only stack (``mixer_only``): the decode
+hot path under study is the packed-cache read/append, and MLP compute
+would add an identical constant to both paths and drown the signal.  The
+2x acceptance gate is asserted at (B=8, S=2048) — the most cache-bound
+shape, where decode is dominated by O(cache) work per step, which is
+exactly what the fused loop's in-place mutation attacks; smaller shapes
+are reported alongside.
+
+Writes ``BENCH_decode.json`` at the repo root in both modes (``--fast``
+is the CI variant: fewer shapes and repeats; the JSON is uploaded as a
+workflow artifact either way).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.init import init_params
+from repro.quant.int4 import pack_params
+from repro.serving.engine import Engine, EngineConfig
+
+from benchmarks._shared import csv
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_decode.json")
+
+CFG = ModelConfig(name="bench-decode", family="dense", n_layers=1,
+                  d_model=32, n_heads=1, n_kv_heads=1, head_dim=32,
+                  d_ff=64, vocab_size=259, mixer_only=True,
+                  param_dtype="float32")
+
+_PARAMS = None
+
+
+def get_params():
+    global _PARAMS
+    if _PARAMS is None:
+        _PARAMS = pack_params(init_params(CFG, jax.random.PRNGKey(0)))
+    return _PARAMS
+
+
+def _greedy_rows_match(host: np.ndarray, fused: np.ndarray,
+                       eos: int) -> bool:
+    """Bit-exact up to (and including) the first EOS; the fused loop
+    freezes the row to EOS afterwards."""
+    for h, f in zip(host, fused):
+        stop = np.where(h == eos)[0]
+        n = int(stop[0]) + 1 if len(stop) else len(h)
+        if not (h[:n] == f[:n]).all():
+            return False
+        if not (f[n:] == eos).all():
+            return False
+    return True
+
+
+def bench_one(B: int, S: int, m: int, reps: int) -> dict:
+    eng = Engine(get_params(), CFG,
+                 EngineConfig(max_seq=S, max_new_tokens=m))
+    prompts = [f"request {i}: the shared exponent of group {i}"
+               for i in range(B)]
+    toks, pp = eng._prepare(prompts)
+    key = jax.random.PRNGKey(0)
+    logits, caches = eng._prefill(eng.params, toks)
+    jax.block_until_ready(logits)
+    clone = lambda: jax.tree.map(lambda a: a.copy(), caches)
+
+    # legacy baseline: per-token dispatch, no donation, select/scatter ops
+    dec_legacy = jax.jit(
+        lambda p, t, c, q: lm.decode_step(p, CFG, t, c, quant=eng.quant,
+                                          pad_prefix=q, legacy_cache=True))
+
+    def host_run():
+        k = key
+        cs = clone()
+        tok = eng._sample(logits, k)
+        out = [tok]
+        for _ in range(m - 1):
+            k, sk = jax.random.split(k)
+            lg, cs = dec_legacy(eng.params, tok, cs, pp)
+            tok = eng._sample(lg, sk)
+            out.append(tok)
+        gen = jnp.stack(out, axis=1)
+        jax.block_until_ready(gen)
+        return gen
+
+    fused_fn = eng._fused(m, start=True)
+
+    def fused_run():
+        out = fused_fn(eng.params, logits, clone(), pp, key)
+        jax.block_until_ready(out["tokens"])
+        return out["tokens"]
+
+    host_gen = np.asarray(host_run())        # warm-up + reference output
+    fused_gen = np.asarray(fused_run())
+    exact = _greedy_rows_match(host_gen, fused_gen, eng.tok.eos_id)
+
+    def best_of(fn):                         # min-of-reps: robust to CPU
+        best = float("inf")                  # contention spikes
+        for _ in range(reps):
+            t0 = time.time()
+            fn()
+            best = min(best, time.time() - t0)
+        return best
+
+    host_s = best_of(host_run)
+    fused_s = best_of(fused_run)
+
+    rec = {"B": B, "S": S, "m": m,
+           "host_tok_s": round(B * m / host_s, 1),
+           "fused_tok_s": round(B * m / fused_s, 1),
+           "speedup": round(host_s / fused_s, 2),
+           "bit_exact_greedy": bool(exact)}
+    csv(f"decode.loop.B{B}.S{S}.m{m}", fused_s * 1e6,
+        f"host_us={host_s * 1e6:.0f},speedup={rec['speedup']},"
+        f"bit_exact={exact}")
+    assert exact, f"fused loop diverged from host loop at B={B}, S={S}"
+    return rec
+
+
+def main(fast: bool = False) -> dict:
+    out = {"meta": {"backend": jax.default_backend(), "fast": fast,
+                    "model": CFG.name,
+                    "note": "host loop = legacy pre-fused serving path "
+                            "(per-token dispatch, no donation, "
+                            "select/scatter cache ops); fused = single "
+                            "jitted lax.scan, donated in-place cache"},
+           "results": []}
+    if fast:
+        shapes = [(8, 512, 32, 2), (8, 2048, 32, 2)]
+    else:
+        shapes = [(1, 512, 64, 3), (8, 512, 64, 3),
+                  (1, 2048, 64, 3), (8, 2048, 64, 3)]
+    for (B, S, m, reps) in shapes:
+        out["results"].append(bench_one(B, S, m, reps))
+
+    key = next(r for r in out["results"] if r["B"] == 8 and r["S"] == 2048)
+    assert key["speedup"] >= 2.0, (
+        f"fused loop speedup {key['speedup']} < 2x over the legacy host "
+        f"loop at B=8, S=2048")
+    with open(BENCH_JSON, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# wrote {os.path.normpath(BENCH_JSON)}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    main(fast=ap.parse_args().fast)

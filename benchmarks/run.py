@@ -23,6 +23,7 @@ MODULES = [
     ("fig1618", "benchmarks.fig1618_accelerators"),
     ("fig19", "benchmarks.fig19_seqlen"),
     ("kernels", "benchmarks.kernels_micro"),
+    ("decode", "benchmarks.decode_throughput"),
 ]
 
 

@@ -205,6 +205,25 @@ def _pack4_tokendim(mant8):
     return bfp.pack_int4(mant8, axis=1)
 
 
+def predicated_write(buf: jax.Array, update: jax.Array, cond,
+                     idx, axis: int = 1) -> jax.Array:
+    """Write ``update`` into ``buf`` at ``idx`` iff ``cond``, else rewrite
+    the slab's current contents.
+
+    The write itself is unconditional — the predicate selects the *slab*
+    (O(slab) work), never the whole buffer.  The alternative
+    ``jnp.where(cond, dynamic_update_slice(buf, ...), buf)`` pattern keeps
+    both the updated and the original buffer live through the select, so
+    XLA must materialize a second O(buf) copy every step even when ``buf``
+    is donated.  This form lowers to a single dynamic-update-slice, which
+    XLA aliases in place under donation (and inside ``lax.scan`` carries).
+    """
+    n = update.shape[axis]
+    cur = jax.lax.dynamic_slice_in_dim(buf, idx, n, axis=axis)
+    slab = jnp.where(cond, update.astype(buf.dtype), cur)
+    return jax.lax.dynamic_update_slice_in_dim(buf, slab, idx, axis=axis)
+
+
 # ---------------------------------------------------------------------------
 # Prefill: build all regions from (B, S, n_kv, hd) fp K/V
 # ---------------------------------------------------------------------------
@@ -294,9 +313,13 @@ def append_token(cache: AsymKVCache, k_new: jax.Array,
                  v_new: jax.Array) -> AsymKVCache:
     """Append one (B, n_kv, hd) K/V token at position t = length.
 
-    jit-safe: all branches via lax.cond-free masking (writes are computed
-    unconditionally and selected).  Demotes K token t-64 (8b->4b) and, when
-    a V group completes, demotes V group g-2.
+    jit-safe: all branches via lax.cond-free masking.  Every region is
+    updated with :func:`predicated_write` — an unconditional slab-sized
+    dynamic-update-slice whose *contents* are selected by the predicate —
+    never with a whole-buffer ``jnp.where`` select, so a donated (or
+    scan-carried) cache is mutated in place instead of copied per step.
+    Demotes K token t-64 (8b->4b) and, when a V group completes, demotes
+    V group g-2.
     """
     t = cache.length
     B, _, H, D = cache.k_init_mant.shape
@@ -308,14 +331,8 @@ def append_token(cache: AsymKVCache, k_new: jax.Array,
     km, ke = _q_k(k_new[:, None], 8)        # (B,1,H,D)/(B,1,H,D//G)
     in_init = t < INIT_TOKENS
     idx_init = jnp.clip(t, 0, INIT_TOKENS - 1)
-    kim = jnp.where(in_init,
-                    jax.lax.dynamic_update_slice_in_dim(
-                        cache.k_init_mant, km, idx_init, axis=1),
-                    cache.k_init_mant)
-    kie = jnp.where(in_init,
-                    jax.lax.dynamic_update_slice_in_dim(
-                        cache.k_init_exp, ke, idx_init, axis=1),
-                    cache.k_init_exp)
+    kim = predicated_write(cache.k_init_mant, km, in_init, idx_init)
+    kie = predicated_write(cache.k_init_exp, ke, in_init, idx_init)
 
     # ---- K: local ring (tokens >= 32) + demotion of token t-64 ----
     in_ring = t >= INIT_TOKENS
@@ -329,23 +346,11 @@ def append_token(cache: AsymKVCache, k_new: jax.Array,
     dm, de = _q_k(old_fp, 4)
     bulk_idx = jnp.clip(demote_tok - INIT_TOKENS, 0,
                         cache.k_bulk_mant.shape[1] - 1)
-    kbm = jnp.where(do_demote,
-                    jax.lax.dynamic_update_slice_in_dim(
-                        cache.k_bulk_mant, _pack4_lastdim(dm), bulk_idx,
-                        axis=1),
-                    cache.k_bulk_mant)
-    kbe = jnp.where(do_demote,
-                    jax.lax.dynamic_update_slice_in_dim(
-                        cache.k_bulk_exp, de, bulk_idx, axis=1),
-                    cache.k_bulk_exp)
-    klm = jnp.where(in_ring,
-                    jax.lax.dynamic_update_slice_in_dim(
-                        cache.k_local_mant, km, slot, axis=1),
-                    cache.k_local_mant)
-    kle = jnp.where(in_ring,
-                    jax.lax.dynamic_update_slice_in_dim(
-                        cache.k_local_exp, ke, slot, axis=1),
-                    cache.k_local_exp)
+    kbm = predicated_write(cache.k_bulk_mant, _pack4_lastdim(dm),
+                           do_demote, bulk_idx)
+    kbe = predicated_write(cache.k_bulk_exp, de, do_demote, bulk_idx)
+    klm = predicated_write(cache.k_local_mant, km, in_ring, slot)
+    kle = predicated_write(cache.k_local_exp, ke, in_ring, slot)
 
     # ---- V: residual group append ----
     r = t % GROUP
@@ -357,8 +362,8 @@ def append_token(cache: AsymKVCache, k_new: jax.Array,
     g = t // GROUP
     gm, ge = _q_v_group(v_resid, 8)         # quantize the full group @8b
     # -- commit to init (g == 0) --
-    vim = jnp.where(completes & (g == 0), gm, cache.v_init_mant)
-    vie = jnp.where(completes & (g == 0), ge, cache.v_init_exp)
+    vim = predicated_write(cache.v_init_mant, gm, completes & (g == 0), 0)
+    vie = predicated_write(cache.v_init_exp, ge, completes & (g == 0), 0)
     # -- commit to local ring (g >= 1) + demote group g-2 --
     vslot = jnp.clip(g % V_LOCAL_GROUPS, 0, V_LOCAL_GROUPS - 1)
     old_vm = jax.lax.dynamic_slice_in_dim(
@@ -370,27 +375,15 @@ def append_token(cache: AsymKVCache, k_new: jax.Array,
     do_vdemote = completes & (g >= 1) & (gd >= 1)
     vb_idx = jnp.clip((gd - 1) * (GROUP // 2), 0,
                       cache.v_bulk_mant.shape[1] - GROUP // 2)
-    vbm = jnp.where(do_vdemote,
-                    jax.lax.dynamic_update_slice_in_dim(
-                        cache.v_bulk_mant, _pack4_tokendim(dvm), vb_idx,
-                        axis=1),
-                    cache.v_bulk_mant)
+    vbm = predicated_write(cache.v_bulk_mant, _pack4_tokendim(dvm),
+                           do_vdemote, vb_idx)
     vbe_idx = jnp.clip(gd, 1, cache.v_bulk_exp.shape[1] - 1)
-    vbe = jnp.where(do_vdemote,
-                    jax.lax.dynamic_update_slice_in_dim(
-                        cache.v_bulk_exp, dve, vbe_idx, axis=1),
-                    cache.v_bulk_exp)
+    vbe = predicated_write(cache.v_bulk_exp, dve, do_vdemote, vbe_idx)
     do_vlocal = completes & (g >= 1)
-    vlm = jnp.where(do_vlocal,
-                    jax.lax.dynamic_update_slice_in_dim(
-                        cache.v_local_mant, gm, vslot * GROUP, axis=1),
-                    cache.v_local_mant)
-    vle = jnp.where(do_vlocal,
-                    jax.lax.dynamic_update_slice_in_dim(
-                        cache.v_local_exp, ge, vslot, axis=1),
-                    cache.v_local_exp)
+    vlm = predicated_write(cache.v_local_mant, gm, do_vlocal, vslot * GROUP)
+    vle = predicated_write(cache.v_local_exp, ge, do_vlocal, vslot)
     # clear residual after commit so stale values never leak into the next
-    # group's shared exponent
+    # group's shared exponent (elementwise select — aliasable in place)
     v_resid = jnp.where(completes, jnp.zeros_like(v_resid), v_resid)
 
     return cache._replace(
@@ -412,23 +405,183 @@ def gather_kv(cache: AsymKVCache, dtype=jnp.float32):
     valid: (max_seq,) bool (position < length).  The k_offsets are *not*
     added back — softmax shift-invariance makes that unnecessary (and the
     paper's hardware never undoes the shift).
+
+    Overlay-based: the init and bulk regions already sit in position
+    order (bulk slot j holds token 32+j), so their dequants concatenate
+    straight into the output, and only the recent window is patched in
+    with slab-sized read-modify-write overlays — a rolled 64-token K ring
+    window and a 96-token V window (two complete ring groups + the
+    residual group re-converted at its current size).  The previous
+    scatter formulation (a chain of full-buffer ``.at[].set`` overlays
+    and position scatters) materialized the O(B·S·hd) output several
+    times per call — on the decode hot path that was the dominant
+    per-step cost on CPU; XLA also lowers position scatters/gathers to
+    scalar loops there.  Invalid positions (>= length) keep whatever the
+    bulk region holds (freshly-demoted garbage), exactly like the scatter
+    formulation — masked by ``valid`` downstream.
     """
     L = cache.length
     B, _, H, D = cache.k_init_mant.shape
     S = cache.max_seq
     pos = jnp.arange(S)
 
-    # --- K --- (one scratch row at index S absorbs invalid-slot writes;
-    # clipping them onto real positions would create duplicate-index
-    # scatters with undefined winner)
+    # --- K: [init | bulk] in position order + rolled local-ring window ---
+    k_init = _dq_k(cache.k_init_mant, cache.k_init_exp, 8, dtype)
+    k_bulk = _dq_k(bfp.unpack_int4(cache.k_bulk_mant, axis=-1),
+                   cache.k_bulk_exp, 4, dtype)
+    k = jnp.concatenate([k_init, k_bulk], axis=1)
+    k_local = _dq_k(cache.k_local_mant, cache.k_local_exp, 8, dtype)
+    # window [w0, w0+64) with w0 = max(L-64, 32): position p lives at ring
+    # slot (p-32)%64, so position order is the ring rolled by -(w0-32)
+    w0 = jnp.clip(L - LOCAL_TOKENS, INIT_TOKENS, S - LOCAL_TOKENS)
+    k_win = jax.lax.dynamic_slice_in_dim(        # ring rolled into position
+        jnp.concatenate([k_local, k_local], axis=1),  # order, O(64) work
+        (w0 - INIT_TOKENS) % LOCAL_TOKENS, LOCAL_TOKENS, axis=1)
+    w_pos = w0 + jnp.arange(LOCAL_TOKENS)
+    base = jax.lax.dynamic_slice_in_dim(k, w0, LOCAL_TOKENS, axis=1)
+    merged = jnp.where((w_pos < L)[None, :, None, None], k_win, base)
+    k = jax.lax.dynamic_update_slice_in_dim(k, merged, w0, axis=1)
+
+    # --- V: [init | bulk | zero tail] in position order + a 3-group
+    # window covering the complete ring groups {cg-2, cg-1} and the
+    # residual group cg (incremental grouping: padded residual slots are
+    # zero and never raise the shared max-exponent) ---
+    cg = L // GROUP
+    r = L % GROUP
+    v_init = _dq_v_group(cache.v_init_mant, cache.v_init_exp, 8, dtype)
+    vb_unpacked = bfp.unpack_int4(cache.v_bulk_mant, axis=1)
+    n_bulk_groups = cache.v_bulk_exp.shape[1]
+    v_bulk = _dq_v_group(
+        vb_unpacked[:, : (n_bulk_groups - 1) * GROUP],
+        cache.v_bulk_exp[:, 1:], 4, dtype)
+    v = jnp.concatenate(
+        [v_init, v_bulk, jnp.zeros((B, GROUP, H, D), dtype)], axis=1)
+    v_local = _dq_v_group(cache.v_local_mant, cache.v_local_exp, 8, dtype)
+    resid_valid = jnp.arange(GROUP) < r
+    resid = jnp.where(resid_valid[None, :, None, None],
+                      cache.v_resid.astype(jnp.float32), 0.0)
+    resid_q = bfp.bfp_fake_quant(resid, GROUP, 8, "trunc",
+                                 axis=1).astype(dtype)
+    n_win = V_LOCAL_GROUPS + 1
+    g0 = jnp.clip((cg - V_LOCAL_GROUPS) * GROUP, 0,
+                  S - n_win * GROUP) // GROUP
+    parts, masks = [], []
+    for i in range(n_win):
+        gi = g0 + i
+        from_ring = jnp.where(gi % V_LOCAL_GROUPS == 0,
+                              v_local[:, :GROUP], v_local[:, GROUP:])
+        parts.append(jnp.where(gi == cg, resid_q, from_ring))
+        is_local = (gi >= 1) & (gi >= cg - V_LOCAL_GROUPS) & (gi < cg)
+        masks.append(jnp.where(gi == cg, resid_valid,
+                               jnp.broadcast_to(is_local, (GROUP,))))
+    v_win = jnp.concatenate(parts, axis=1)          # (B, 96, H, D)
+    v_mask = jnp.concatenate(masks)                 # (96,)
+    base = jax.lax.dynamic_slice_in_dim(v, g0 * GROUP, n_win * GROUP,
+                                        axis=1)
+    merged = jnp.where(v_mask[None, :, None, None], v_win, base)
+    v = jax.lax.dynamic_update_slice_in_dim(v, merged, g0 * GROUP, axis=1)
+
+    valid = pos < L
+    return k, v, valid
+
+
+# ---------------------------------------------------------------------------
+# Legacy (pre-fused-loop) formulations, kept as the decode-throughput
+# benchmark baseline (same values bit-for-bit, different data movement):
+#   * append_token_select — whole-buffer jnp.where selects around every
+#     dynamic_update_slice (no in-place aliasing under donation),
+#   * gather_kv_select — position scatters / .at[].set overlay chains.
+# ---------------------------------------------------------------------------
+
+def append_token_select(cache: AsymKVCache, k_new: jax.Array,
+                        v_new: jax.Array) -> AsymKVCache:
+    """Legacy append: ``jnp.where(cond, dynamic_update_slice(...), x)`` on
+    every region (the pattern the predicated-write rewrite replaced)."""
+    t = cache.length
+    k_new = (k_new.astype(jnp.float32)
+             - cache.k_offsets).astype(jnp.float32)
+    v_new = v_new.astype(cache.v_resid.dtype)
+
+    km, ke = _q_k(k_new[:, None], 8)
+    in_init = t < INIT_TOKENS
+    idx_init = jnp.clip(t, 0, INIT_TOKENS - 1)
+    dus = jax.lax.dynamic_update_slice_in_dim
+    kim = jnp.where(in_init, dus(cache.k_init_mant, km, idx_init, axis=1),
+                    cache.k_init_mant)
+    kie = jnp.where(in_init, dus(cache.k_init_exp, ke, idx_init, axis=1),
+                    cache.k_init_exp)
+
+    in_ring = t >= INIT_TOKENS
+    slot = jnp.clip((t - INIT_TOKENS) % LOCAL_TOKENS, 0, LOCAL_TOKENS - 1)
+    old_m = jax.lax.dynamic_slice_in_dim(cache.k_local_mant, slot, 1, axis=1)
+    old_e = jax.lax.dynamic_slice_in_dim(cache.k_local_exp, slot, 1, axis=1)
+    demote_tok = t - LOCAL_TOKENS
+    do_demote = in_ring & (demote_tok >= INIT_TOKENS)
+    dm, de = _q_k(_dq_k(old_m, old_e, 8), 4)
+    bulk_idx = jnp.clip(demote_tok - INIT_TOKENS, 0,
+                        cache.k_bulk_mant.shape[1] - 1)
+    kbm = jnp.where(do_demote, dus(cache.k_bulk_mant, _pack4_lastdim(dm),
+                                   bulk_idx, axis=1), cache.k_bulk_mant)
+    kbe = jnp.where(do_demote, dus(cache.k_bulk_exp, de, bulk_idx, axis=1),
+                    cache.k_bulk_exp)
+    klm = jnp.where(in_ring, dus(cache.k_local_mant, km, slot, axis=1),
+                    cache.k_local_mant)
+    kle = jnp.where(in_ring, dus(cache.k_local_exp, ke, slot, axis=1),
+                    cache.k_local_exp)
+
+    r = t % GROUP
+    v_resid = dus(cache.v_resid, v_new[:, None], r, axis=1)
+    completes = r == GROUP - 1
+    g = t // GROUP
+    gm, ge = _q_v_group(v_resid, 8)
+    vim = jnp.where(completes & (g == 0), gm, cache.v_init_mant)
+    vie = jnp.where(completes & (g == 0), ge, cache.v_init_exp)
+    vslot = jnp.clip(g % V_LOCAL_GROUPS, 0, V_LOCAL_GROUPS - 1)
+    old_vm = jax.lax.dynamic_slice_in_dim(
+        cache.v_local_mant, vslot * GROUP, GROUP, axis=1)
+    old_ve = jax.lax.dynamic_slice_in_dim(cache.v_local_exp, vslot, 1,
+                                          axis=1)
+    dvm, dve = _q_v_group(_dq_v_group(old_vm, old_ve, 8), 4)
+    gd = g - V_LOCAL_GROUPS
+    do_vdemote = completes & (g >= 1) & (gd >= 1)
+    vb_idx = jnp.clip((gd - 1) * (GROUP // 2), 0,
+                      cache.v_bulk_mant.shape[1] - GROUP // 2)
+    vbm = jnp.where(do_vdemote, dus(cache.v_bulk_mant,
+                                    _pack4_tokendim(dvm), vb_idx, axis=1),
+                    cache.v_bulk_mant)
+    vbe_idx = jnp.clip(gd, 1, cache.v_bulk_exp.shape[1] - 1)
+    vbe = jnp.where(do_vdemote, dus(cache.v_bulk_exp, dve, vbe_idx, axis=1),
+                    cache.v_bulk_exp)
+    do_vlocal = completes & (g >= 1)
+    vlm = jnp.where(do_vlocal, dus(cache.v_local_mant, gm, vslot * GROUP,
+                                   axis=1), cache.v_local_mant)
+    vle = jnp.where(do_vlocal, dus(cache.v_local_exp, ge, vslot, axis=1),
+                    cache.v_local_exp)
+    v_resid = jnp.where(completes, jnp.zeros_like(v_resid), v_resid)
+
+    return cache._replace(
+        k_init_mant=kim, k_init_exp=kie, k_local_mant=klm, k_local_exp=kle,
+        k_bulk_mant=kbm, k_bulk_exp=kbe,
+        v_resid=v_resid, v_init_mant=vim, v_init_exp=vie,
+        v_local_mant=vlm, v_local_exp=vle, v_bulk_mant=vbm, v_bulk_exp=vbe,
+        length=t + 1)
+
+
+def gather_kv_select(cache: AsymKVCache, dtype=jnp.float32):
+    """Legacy gather: scatter the ring/local/residual regions into
+    position order through ``.at[].set`` overlay chains (each one
+    materializes the O(B·S·hd) output again)."""
+    L = cache.length
+    B, _, H, D = cache.k_init_mant.shape
+    S = cache.max_seq
+    pos = jnp.arange(S)
+
     k = jnp.zeros((B, S + 1, H, D), dtype)
     k = k.at[:, :INIT_TOKENS].set(_dq_k(cache.k_init_mant,
                                         cache.k_init_exp, 8, dtype))
-    # bulk: slot j -> position 32+j, valid while token < max(L-64, 32)
     kb = _dq_k(bfp.unpack_int4(cache.k_bulk_mant, axis=-1),
                cache.k_bulk_exp, 4, dtype)
     k = k.at[:, INIT_TOKENS:S].set(kb)
-    # local ring: slot s holds token t_s = largest t < L with (t-32)%64 == s
     s_idx = jnp.arange(LOCAL_TOKENS)
     t_s = INIT_TOKENS + s_idx + LOCAL_TOKENS * (
         (L - 1 - INIT_TOKENS - s_idx) // LOCAL_TOKENS)
@@ -438,19 +591,15 @@ def gather_kv(cache: AsymKVCache, dtype=jnp.float32):
     k = k.at[:, t_safe].set(kl)
     k = k[:, :S]
 
-    # --- V ---
     v = jnp.zeros((B, S + GROUP, H, D), dtype)
     v = v.at[:, :GROUP].set(_dq_v_group(cache.v_init_mant,
                                         cache.v_init_exp, 8, dtype))
-    # bulk groups 1..cg-3 -> positions [32, (cg-2)*32)
     vb_unpacked = bfp.unpack_int4(cache.v_bulk_mant, axis=1)
     n_bulk_groups = cache.v_bulk_exp.shape[1]
     vb = _dq_v_group(
         vb_unpacked[:, : (n_bulk_groups - 1) * GROUP],
         cache.v_bulk_exp[:, 1:], 4, dtype)
     v = v.at[:, GROUP:GROUP + vb.shape[1]].set(vb)
-    # local groups: ring slot sg holds group g_sg = largest complete g >= 1
-    # with g % 2 == sg; invalid slots write the scratch group at S//GROUP
     cg = L // GROUP
     sg = jnp.arange(V_LOCAL_GROUPS)
     g_s = sg + V_LOCAL_GROUPS * ((cg - 1 - sg) // V_LOCAL_GROUPS)
@@ -463,9 +612,6 @@ def gather_kv(cache: AsymKVCache, dtype=jnp.float32):
     vl_flat = vl.reshape(B, V_LOCAL_GROUPS * GROUP, H, D)
     v = v.at[:, tok_targets].set(vl_flat)
     v = v[:, :S]
-    # residual: tokens cg*32 .. L-1, re-converted at current size (the
-    # incremental grouping: shared exponent over just the valid residents —
-    # padded slots are zero and never raise the max-exponent)
     r = L % GROUP
     resid_valid = jnp.arange(GROUP) < r
     resid = jnp.where(resid_valid[None, :, None, None],
@@ -493,4 +639,5 @@ def fp16_cache_bytes(batch: int, n_kv: int, head_dim: int,
 
 __all__ = ["AsymKVCache", "init_cache", "prefill_cache", "append_token",
            "gather_kv", "fake_quant_kv", "cache_bytes", "fp16_cache_bytes",
+           "predicated_write", "append_token_select", "gather_kv_select",
            "INIT_TOKENS", "LOCAL_TOKENS", "GROUP", "V_LOCAL_GROUPS"]

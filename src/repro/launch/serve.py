@@ -5,7 +5,11 @@
 
 Initializes (or loads) weights, INT4-packs them, and serves batched
 requests through the Harmonia engine (BFP activations + packed
-asymmetric KV cache).
+asymmetric KV cache).  Generation runs through the fused on-device loop
+(single jitted scan, donated in-place cache) unless ``--host-loop`` is
+given; ``--continuous`` serves the prompts through the
+continuous-batching ``ServeLoop`` (finished rows swapped for queued
+requests at chunk boundaries) instead of one batched ``generate`` call.
 """
 from __future__ import annotations
 
@@ -26,7 +30,21 @@ def main():
     ap.add_argument("--pallas", action="store_true",
                     help="serve through the grid-fused Pallas kernels "
                          "(prefill + 4-bit bulk decode)")
+    ap.add_argument("--host-loop", action="store_true",
+                    help="legacy per-token host loop instead of the "
+                         "fused on-device generation loop")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the continuous-batching ServeLoop "
+                         "(row swap at chunk boundaries)")
+    ap.add_argument("--batch-size", type=int, default=4,
+                    help="continuous-batching batch width")
+    ap.add_argument("--max-steps", type=int, default=32,
+                    help="continuous-batching chunk length (rounded up "
+                         "to a multiple of 32)")
     args = ap.parse_args()
+    if args.continuous and args.host_loop:
+        ap.error("--continuous drives the fused continuation loop and "
+                 "cannot run with --host-loop")
 
     import jax
 
@@ -34,7 +52,7 @@ def main():
     from repro.core.quant_config import get_recipe
     from repro.models.init import init_params
     from repro.quant.int4 import pack_params
-    from repro.serving.engine import Engine, EngineConfig
+    from repro.serving.engine import Engine, EngineConfig, ServeLoop
 
     spec = get_arch(args.arch)
     cfg = spec.smoke if args.smoke else spec.config
@@ -51,12 +69,27 @@ def main():
     eng = Engine(params, cfg, EngineConfig(
         max_seq=args.max_seq, max_new_tokens=args.max_new,
         quant=get_recipe(args.recipe), sampler=args.sampler,
-        use_pallas_kernels=args.pallas))
+        use_pallas_kernels=args.pallas,
+        fused_loop=not args.host_loop))
+
+    if args.continuous:
+        loop = ServeLoop(eng, batch_size=args.batch_size,
+                         max_steps=args.max_steps)
+        texts = loop.serve(args.prompts)
+        for p, t in zip(args.prompts, texts):
+            print(f"[serve] {p!r} -> {t!r}")
+        print(f"[serve] continuous batching: {loop.stats['waves']} waves, "
+              f"{loop.stats['chunks']} chunks, {loop.stats['swaps']} "
+              f"row swaps")
+        return
+
     out = eng.generate(args.prompts)
     for p, t in zip(args.prompts, out["texts"]):
         print(f"[serve] {p!r} -> {t!r}")
-    print(f"[serve] {out['tokens_per_s']:.1f} tok/s, KV storage "
-          f"fraction {out['cache_stats']['storage_fraction']:.3f}")
+    print(f"[serve] {out['tokens_per_s']:.1f} tok/s raw, "
+          f"{out['useful_tokens_per_s']:.1f} tok/s useful "
+          f"(EOS-truncated), KV storage fraction "
+          f"{out['cache_stats']['storage_fraction']:.3f}")
 
 
 if __name__ == "__main__":

@@ -47,6 +47,9 @@ class Ctx:
     dp_axes: tuple = ("data",)     # + production meshes only)
     use_pallas: bool = False       # grid-fused Pallas kernels on the
                                    # prefill/decode global-attn hot paths
+    legacy_cache: bool = False     # pre-fused-loop cache ops (select-based
+                                   # append + scatter gather) — the decode
+                                   # throughput benchmark baseline
 
 
 def _c(x, ctx: Ctx, *spec):
@@ -186,12 +189,14 @@ def _attn_block(h, p, kind: str, cfg: ModelConfig,
                 c, k.astype(jnp.float32), v.astype(jnp.float32))
     elif ctx.mode == "decode":
         if kind == "attn":
-            new_cache = kvcache.append_token(cache, k[:, 0], v[:, 0])
+            append = (kvcache.append_token_select if ctx.legacy_cache
+                      else kvcache.append_token)
+            new_cache = append(cache, k[:, 0], v[:, 0])
             attn = attn_lib.attention_decode_packed(
                 q, new_cache, logit_cap=cfg.attn_logit_softcap, quant=quant,
                 extra_invalid_prefix=ctx.pad_prefix,
                 seq_shard=ctx.seq_shard, dp_axes=ctx.dp_axes,
-                use_pallas=ctx.use_pallas)
+                use_pallas=ctx.use_pallas, legacy=ctx.legacy_cache)
         else:
             new_cache = attn_lib.ring_append(cache, k[:, 0], v[:, 0])
             attn = attn_lib.ring_decode_attention(
@@ -459,19 +464,113 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, caches, *,
                 quant: Optional[QuantConfig] = None,
                 pad_prefix: Optional[jax.Array] = None,
                 unroll: bool = False, seq_shard: bool = False,
-                dp_axes: tuple = ("data",), use_pallas: bool = False):
+                dp_axes: tuple = ("data",), use_pallas: bool = False,
+                legacy_cache: bool = False):
     """token: (B,) -> (logits (B, V), new caches)."""
     B = token.shape[0]
     t = caches["_pos"]
     positions = jnp.broadcast_to(t[None, None], (B, 1)).astype(jnp.int32)
     h = _embed(params, cfg, token[:, None], positions)
     ctx = Ctx(mode="decode", positions=positions, pad_prefix=pad_prefix,
-              seq_shard=seq_shard, dp_axes=dp_axes, use_pallas=use_pallas)
+              seq_shard=seq_shard, dp_axes=dp_axes, use_pallas=use_pallas,
+              legacy_cache=legacy_cache)
     h, new_caches = _run_stack(h, params["blocks"], cfg, quant, ctx, caches,
                                unroll=unroll)
     new_caches["_pos"] = t + 1
     logits = _head(params, cfg, h, quant)[:, 0]
     return logits, new_caches
+
+
+def generate_loop(params, cfg: ModelConfig, caches, *, num_steps: int,
+                  logits0: Optional[jax.Array] = None,
+                  tok0: Optional[jax.Array] = None,
+                  key: Optional[jax.Array] = None,
+                  sample_fn=None, eos_id: Optional[int] = None,
+                  finished: Optional[jax.Array] = None,
+                  quant: Optional[QuantConfig] = None,
+                  pad_prefix: Optional[jax.Array] = None,
+                  unroll: bool = False, seq_shard: bool = False,
+                  dp_axes: tuple = ("data",),
+                  use_pallas: bool = False) -> Dict[str, Any]:
+    """Fused on-device generation: one ``lax.scan`` whose body embeds the
+    carried token, runs a decode step (which appends to the carried
+    caches), samples the next token and updates per-row finished masks —
+    so a whole ``num_steps``-token generation is a single dispatch instead
+    of one dispatch (plus a host-side sample) per token.
+
+    Exactly one of ``logits0`` / ``tok0`` must be given:
+      * ``logits0`` (B, V): start-of-generation form.  The first emitted
+        token is sampled from these prefill logits with ``key`` itself
+        (un-split), then ``num_steps - 1`` decode steps run — the same key
+        schedule as the per-step host loop, so outputs are bit-exact
+        against it.
+      * ``tok0`` (B,): continuation form (the serving loop's
+        ``max_steps``-chunked scan).  ``tok0`` is the last token already
+        emitted; ``num_steps`` decode steps run, each emitting one token.
+        ``finished`` carries the per-row EOS state across chunks.
+
+    ``sample_fn(logits, key) -> (B,) int32`` must be trace-safe (the
+    repro.serving.sampler functions all are); it defaults to greedy.
+    ``eos_id``: when set, a row that has emitted EOS keeps stepping (the
+    packed cache shares one position counter, so shapes stay static) but
+    both its fed-back and emitted tokens are frozen to ``eos_id``; when
+    ``None``, no masking is applied (raw per-step-loop equivalence).
+
+    The carried caches are updated via predicated writes (see
+    ``kvcache.append_token``), so under ``jax.jit(...,
+    donate_argnums=...)`` the scan mutates the packed cache in place —
+    no step allocates a second copy.
+
+    Returns ``{"tokens": (B, num_steps) int32, "caches", "finished": (B,)
+    bool, "last_tok": (B,) int32, "key"}``.
+    """
+    if (logits0 is None) == (tok0 is None):
+        raise ValueError("pass exactly one of logits0 / tok0")
+    if num_steps < 1:
+        raise ValueError(f"num_steps must be >= 1, got {num_steps}")
+    if sample_fn is None:
+        sample_fn = lambda lg, k: jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    if logits0 is not None:
+        B = logits0.shape[0]
+        if finished is None:
+            finished = jnp.zeros((B,), bool)
+        tok = sample_fn(logits0, key).astype(jnp.int32)
+        if eos_id is not None:
+            tok = jnp.where(finished, jnp.int32(eos_id), tok)
+            finished = finished | (tok == eos_id)
+        emit_first = tok[:, None]
+        n_scan = num_steps - 1
+    else:
+        B = tok0.shape[0]
+        if finished is None:
+            finished = jnp.zeros((B,), bool)
+        tok = tok0.astype(jnp.int32)
+        emit_first = None
+        n_scan = num_steps
+
+    def step(carry, _):
+        tk, cs, k, fin = carry
+        k, sk = jax.random.split(k)
+        lg, cs = decode_step(params, cfg, tk, cs, quant=quant,
+                             pad_prefix=pad_prefix, unroll=unroll,
+                             seq_shard=seq_shard, dp_axes=dp_axes,
+                             use_pallas=use_pallas)
+        nxt = sample_fn(lg, sk).astype(jnp.int32)
+        if eos_id is not None:
+            nxt = jnp.where(fin, jnp.int32(eos_id), nxt)
+            fin = fin | (nxt == eos_id)
+        return (nxt, cs, k, fin), nxt
+
+    (tok, caches, key, finished), toks = jax.lax.scan(
+        step, (tok, caches, key, finished), length=n_scan)
+    toks = jnp.moveaxis(toks, 0, 1)                    # (B, n_scan)
+    if emit_first is not None:
+        toks = jnp.concatenate([emit_first, toks], axis=1)
+    return {"tokens": toks, "caches": caches, "finished": finished,
+            "last_tok": tok, "key": key}
 
 
 def init_decode_caches(cfg: ModelConfig, batch: int, max_seq: int,
@@ -514,5 +613,5 @@ def init_decode_caches(cfg: ModelConfig, batch: int, max_seq: int,
             "_pos": jnp.zeros((), jnp.int32)}
 
 
-__all__ = ["forward", "prefill", "decode_step", "encoder_forward",
-           "init_decode_caches", "Ctx", "apply_block"]
+__all__ = ["forward", "prefill", "decode_step", "generate_loop",
+           "encoder_forward", "init_decode_caches", "Ctx", "apply_block"]

@@ -6,19 +6,28 @@ Request flow:
      ``pad_prefix`` mask),
   2. ``prefill``: INT4 weights x BFP activations, builds the packed
      asymmetric KV cache (init/bulk/local regions) + online K offsets,
-  3. ``decode``: one fused step per token for the whole batch; finished
-     rows (EOS or max) keep decoding but their outputs are masked
-     (static-shape batching — the production version swaps finished rows
-     for queued requests between steps, which is what ``ServeLoop`` does).
+  3. ``decode``: by default the *fused on-device loop* — one jitted
+     ``lax.scan`` (``lm.generate_loop``) that embeds, decode-steps,
+     samples and appends per iteration, with the cache donated
+     (``donate_argnums``) so predicated writes mutate it in place.  The
+     legacy one-dispatch-per-token host loop is kept behind
+     ``fused=False`` for regression and benchmarking.
 
-Throughput accounting reports tokens/s and the modeled HBM traffic saved
+``ServeLoop`` implements continuous batching on top of the fused loop's
+``max_steps``-chunked continuation form: finished rows are re-prefilled
+with queued requests into the freed cache rows at chunk boundaries (the
+shared position counter stays GROUP-aligned because chunks are ALIGN
+multiples).
+
+Throughput accounting reports raw tokens/s (every decoded position),
+``useful_tokens_per_s`` (EOS-truncated) and the modeled HBM traffic saved
 by the 4-bit bulk cache (fp16 baseline vs packed actual).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +43,12 @@ from repro.serving import sampler as sampler_lib
 ALIGN = 32  # prefill lengths must be multiples of the BFP group
 
 
+def ceil_align(n: int) -> int:
+    """Round up to the next ALIGN multiple — the shared-counter alignment
+    invariant every prefill length and chunk boundary must satisfy."""
+    return -(-n // ALIGN) * ALIGN
+
+
 @dataclasses.dataclass
 class EngineConfig:
     max_seq: int = 512
@@ -44,10 +59,46 @@ class EngineConfig:
     seed: int = 0
     # Route global-attention prefill and the 4-bit bulk decode region
     # through the grid-fused Pallas kernels (one pallas_call over the
-    # (batch x kv-head) grid with causal/dead tile skipping) instead of
+    # (batch x kv-head) grid with causal tile skipping) instead of
     # the XLA dequantize-and-attend paths.  Off by default: the XLA path
     # keeps the fake-quant P numerics used by the accuracy benchmarks.
     use_pallas_kernels: bool = False
+    # Run generation through the fused on-device loop (single dispatch
+    # for the whole decode, donated in-place cache).  ``False`` restores
+    # the per-token host loop (kept for regression/benchmarks).
+    fused_loop: bool = True
+
+
+def scatter_rows(dst, src, rows: Sequence[int], batch: int):
+    """Scatter the rows of cache-tree ``src`` (batch ``len(rows)``) into
+    rows ``rows`` of ``dst`` (batch ``batch``).
+
+    Cache leaves carry the batch axis at different positions (axis 0 for
+    remainder-block caches, axis 2 for scan-stacked ``(n_rep, c_k, B,
+    ...)`` leaves), so the axis is located per leaf as the unique axis
+    where the shapes differ by exactly ``batch`` vs ``len(rows)``.
+    Leaves with identical shapes are row-independent (position counters,
+    ring slot positions) and must already agree — the serving loop only
+    swaps rows at matching shared-counter values — so ``dst``'s copy is
+    kept.
+    """
+    n = len(rows)
+    if n == batch:
+        raise ValueError("full-batch scatter: replace the cache instead")
+    rows_arr = jnp.asarray(list(rows))
+
+    def leaf(d, s):
+        if d.shape == s.shape:
+            return d
+        for ax in range(d.ndim):
+            if (d.shape[ax] == batch and s.shape[ax] == n
+                    and d.shape[:ax] == s.shape[:ax]
+                    and d.shape[ax + 1:] == s.shape[ax + 1:]):
+                idx = (slice(None),) * ax + (rows_arr,)
+                return d.at[idx].set(s.astype(d.dtype))
+        raise ValueError(f"no batch axis found: dst {d.shape} src {s.shape}")
+
+    return jax.tree.map(leaf, dst, src)
 
 
 class Engine:
@@ -61,69 +112,135 @@ class Engine:
             lambda p, t: lm.prefill(p, cfg, t, max_seq=ecfg.max_seq,
                                     quant=self.quant,
                                     use_pallas=ecfg.use_pallas_kernels))
+        # donate the cache: append_token's predicated writes let XLA alias
+        # every region buffer in place instead of allocating a second cache
         self._decode = jax.jit(
             lambda p, t, c, pp: lm.decode_step(
                 p, cfg, t, c, quant=self.quant, pad_prefix=pp,
-                use_pallas=ecfg.use_pallas_kernels))
-        self._sample: Callable = {
-            "greedy": lambda lg, key: sampler_lib.greedy(lg),
-            "temperature": lambda lg, key: sampler_lib.temperature(
-                lg, key, ecfg.temperature),
-            "top_k": lambda lg, key: sampler_lib.top_k(
-                lg, key, temp=ecfg.temperature),
-        }[ecfg.sampler]
+                use_pallas=ecfg.use_pallas_kernels),
+            donate_argnums=2)
+        self._sample: Callable = sampler_lib.make_sampler(
+            ecfg.sampler, temperature_value=ecfg.temperature)
+        self._loops: Dict = {}
+
+    def _fused(self, num_steps: int, start: bool):
+        """Memoized jitted fused loop (cache donated).
+
+        ``start=True``: takes prefill logits, emits ``num_steps`` tokens
+        (first sampled from the logits).  ``start=False``: continuation —
+        takes the last emitted token + finished mask, emits ``num_steps``
+        decode tokens (the ServeLoop chunk primitive).
+        """
+        memo_key = (num_steps, start)
+        if memo_key not in self._loops:
+            common = dict(num_steps=num_steps, sample_fn=self._sample,
+                          eos_id=self.tok.eos_id, quant=self.quant,
+                          use_pallas=self.ecfg.use_pallas_kernels)
+            if start:
+                def f(p, logits0, caches, pp, key):
+                    return lm.generate_loop(p, self.cfg, caches,
+                                            logits0=logits0, key=key,
+                                            pad_prefix=pp, **common)
+            else:
+                def f(p, tok, caches, pp, key, finished):
+                    return lm.generate_loop(p, self.cfg, caches,
+                                            tok0=tok, key=key,
+                                            finished=finished,
+                                            pad_prefix=pp, **common)
+            self._loops[memo_key] = jax.jit(f, donate_argnums=2)
+        return self._loops[memo_key]
 
     # -- batching --
-    def _prepare(self, prompts: List[str]):
+    def _prepare(self, prompts: List[str], pad_to: Optional[int] = None):
+        """Encode, truncate, vocab-clip and left-pad to a shared
+        ALIGN-multiple length (``pad_to`` overrides it — the serving
+        loop's row re-prefill at the shared position counter)."""
+        if not prompts:
+            raise ValueError("prompts must be a non-empty list")
         ids = [self.tok.encode(p)[: self.ecfg.max_seq - ALIGN]
                for p in prompts]
-        longest = max(len(x) for x in ids)
-        padded_len = -(-longest // ALIGN) * ALIGN
+        longest = max((len(x) for x in ids), default=0)
+        # all-empty prompt lists would otherwise yield padded_len == 0 and
+        # degenerate (B, 0) model shapes — always allocate one ALIGN block
+        padded_len = max(ALIGN, ceil_align(longest))
+        if pad_to is not None:
+            if longest > pad_to or pad_to % ALIGN:
+                raise ValueError(f"cannot pad prompts of length {longest} "
+                                 f"to {pad_to}")
+            padded_len = pad_to
+        return self._pad_batch(ids, padded_len)
+
+    def _pad_batch(self, ids: List[List[int]], padded_len: int):
         B = len(ids)
         toks = np.full((B, padded_len), self.tok.pad_id, np.int32)
         pad_prefix = np.zeros((B,), np.int32)
         for i, x in enumerate(ids):
-            toks[i, padded_len - len(x):] = x     # left pad
+            if x:
+                toks[i, padded_len - len(x):] = x     # left pad
             pad_prefix[i] = padded_len - len(x)
-        vocab = self.cfg.vocab_size
-        toks = np.minimum(toks, vocab - 1)
+        toks = np.minimum(toks, self.cfg.vocab_size - 1)
         return jnp.asarray(toks), jnp.asarray(pad_prefix)
 
     def generate(self, prompts: List[str],
-                 max_new_tokens: Optional[int] = None) -> dict:
-        """Returns {texts, tokens, tokens_per_s, cache_stats}."""
+                 max_new_tokens: Optional[int] = None,
+                 fused: Optional[bool] = None) -> dict:
+        """Returns {texts, tokens, tokens_per_s, useful_tokens_per_s,
+        cache_stats}.  ``fused=None`` follows ``ecfg.fused_loop``."""
         m = max_new_tokens or self.ecfg.max_new_tokens
+        fused = self.ecfg.fused_loop if fused is None else fused
+        if not prompts:
+            return {"texts": [], "tokens": np.zeros((0, m), np.int32),
+                    "tokens_per_s": 0.0, "useful_tokens_per_s": 0.0,
+                    "wall_s": 0.0, "cache_stats": {}}
         toks, pad_prefix = self._prepare(prompts)
         B, S = toks.shape
+        if S + m - 1 > self.ecfg.max_seq:
+            # emitting m tokens appends only m-1 (the first is sampled
+            # from prefill logits, the last is never appended); past
+            # capacity the K ring would wrap over live tokens and bulk
+            # writes clip onto the last slot — refuse loudly instead of
+            # silently corrupting the packed cache
+            raise ValueError(
+                f"prompt length {S} + max_new_tokens {m} - 1 exceeds "
+                f"max_seq {self.ecfg.max_seq}")
         key = jax.random.PRNGKey(self.ecfg.seed)
 
         t0 = time.time()
         logits, caches = self._prefill(self.params, toks)
-        out = []
-        tok = self._sample(logits, key)
-        out.append(tok)
-        for i in range(m - 1):
-            key, sk = jax.random.split(key)
-            logits, caches = self._decode(self.params, tok, caches,
-                                          pad_prefix)
-            tok = self._sample(logits, sk)
-            out.append(tok)
-        gen = jnp.stack(out, axis=1)
+        if fused:
+            out = self._fused(m, start=True)(
+                self.params, logits, caches, pad_prefix, key)
+            gen = out["tokens"]
+            caches = out["caches"]
+        else:
+            out_list = []
+            tok = self._sample(logits, key)
+            out_list.append(tok)
+            for _ in range(m - 1):
+                key, sk = jax.random.split(key)
+                logits, caches = self._decode(self.params, tok, caches,
+                                              pad_prefix)
+                tok = self._sample(logits, sk)
+                out_list.append(tok)
+            gen = jnp.stack(out_list, axis=1)
         jax.block_until_ready(gen)
         dt = time.time() - t0
 
         texts = []
+        useful = 0
         arr = np.asarray(gen)
         for i in range(B):
             row = arr[i]
             stop = np.where(row == self.tok.eos_id)[0]
             row = row[: stop[0]] if len(stop) else row
+            useful += len(row)
             texts.append(self.tok.decode(row.tolist()))
 
         stats = self._cache_stats(caches, S + m)
         return {"texts": texts, "tokens": arr,
-                "tokens_per_s": B * m / dt, "wall_s": dt,
-                "cache_stats": stats}
+                "tokens_per_s": B * m / dt,
+                "useful_tokens_per_s": useful / dt,
+                "wall_s": dt, "cache_stats": stats}
 
     def _cache_stats(self, caches, seq_len: int) -> dict:
         packed = 0
@@ -132,8 +249,6 @@ class Engine:
                 packed += leaf.size * leaf.dtype.itemsize
         n_attn = sum(n for k, n in self.cfg.kind_counts().items()
                      if k in ("attn", "local_attn"))
-        B = 1  # per-row accounting below uses total anyway
-        del B
         fp16 = (n_attn * kvcache.fp16_cache_bytes(
             1, self.cfg.n_kv_heads, self.cfg.head_dim, self.ecfg.max_seq))
         return {"packed_cache_bytes_total": int(packed),
@@ -143,22 +258,165 @@ class Engine:
 
 
 class ServeLoop:
-    """Continuous batching: a queue of requests is served in waves; rows
-    that finish are replaced by queued requests at wave boundaries."""
+    """Continuous batching over the fused loop's chunked continuation.
 
-    def __init__(self, engine: Engine, batch_size: int = 4):
+    A fixed-width batch decodes in ``max_steps``-sized on-device chunks;
+    at chunk boundaries, rows that finished (EOS or budget) are
+    re-prefilled with queued requests into the freed cache rows
+    (``scatter_rows``), so the batch never drains to serve the queue.
+    ``max_steps`` is rounded up to an ALIGN multiple: the packed cache
+    shares one position counter across rows, and keeping chunk boundaries
+    GROUP-aligned is what lets a fresh request prefill to exactly the
+    current counter value.  When every row has drained and requests
+    remain, a fresh wave restarts the counter instead (cheaper than
+    re-prefilling at a long padded length).
+    """
+
+    def __init__(self, engine: Engine, batch_size: int = 4,
+                 max_steps: int = ALIGN):
         self.engine = engine
         self.batch = batch_size
+        self.max_steps = max(ALIGN, ceil_align(max_steps))
+        self.stats = {"waves": 0, "chunks": 0, "swaps": 0}
 
-    def serve(self, prompts: List[str], **kw) -> List[str]:
-        results: List[str] = [None] * len(prompts)
-        order = list(range(len(prompts)))
-        while order:
-            wave, order = order[: self.batch], order[self.batch:]
-            out = self.engine.generate([prompts[i] for i in wave], **kw)
-            for slot, i in enumerate(wave):
-                results[i] = out["texts"][slot]
+    def serve(self, prompts: List[str],
+              max_new_tokens: Union[int, Sequence[int], None] = None
+              ) -> List[str]:
+        if not prompts:
+            return []
+        if isinstance(max_new_tokens, (list, tuple)):
+            if len(max_new_tokens) != len(prompts):
+                raise ValueError("per-request budgets must match prompts")
+            budgets = list(max_new_tokens)
+        else:
+            budgets = [max_new_tokens
+                       or self.engine.ecfg.max_new_tokens] * len(prompts)
+        results: List[Optional[str]] = [None] * len(prompts)
+        queue = list(range(len(prompts)))
+        self.stats = {"waves": 0, "chunks": 0, "swaps": 0}
+        while queue:
+            queue = self._run_wave(prompts, budgets, queue, results)
         return results
 
+    # -- one wave: a batch of rows decoded to completion, with row swaps --
+    def _finalize(self, req: int, toks: List[int], budget: int,
+                  results: List[Optional[str]]):
+        seq = toks[:budget]
+        eos = self.engine.tok.eos_id
+        if eos in seq:
+            seq = seq[: seq.index(eos)]
+        results[req] = self.engine.tok.decode(seq)
 
-__all__ = ["Engine", "EngineConfig", "ServeLoop", "ALIGN"]
+    def _run_wave(self, prompts, budgets, queue, results):
+        eng = self.engine
+        self.stats["waves"] += 1
+        B = min(self.batch, len(queue))
+        wave, queue = queue[:B], queue[B:]
+        toks, pad_prefix = eng._prepare([prompts[i] for i in wave])
+        key = jax.random.PRNGKey(eng.ecfg.seed)
+        logits, caches = eng._prefill(eng.params, toks)
+        tok = eng._sample(logits, key)          # first token of every row
+        eos = eng.tok.eos_id
+        finished = tok == eos
+        row_req: List[Optional[int]] = list(wave)
+        first = np.asarray(tok)
+        row_toks: List[List[int]] = [[int(first[r])] for r in range(B)]
+
+        while True:
+            # finalize satisfied rows (EOS or budget reached) — checked
+            # before every chunk, so a budget of 1 / an EOS first token
+            # never costs a full decode chunk
+            for r in range(B):
+                if row_req[r] is None:
+                    continue
+                budget = budgets[row_req[r]]
+                ts = row_toks[r]
+                if eos in ts[:budget] or len(ts) >= budget:
+                    self._finalize(row_req[r], ts, budget, results)
+                    row_req[r] = None
+            live = [r for r in range(B) if row_req[r] is not None]
+            if not live:
+                break                            # fresh wave is cheaper
+            free = [r for r in range(B) if row_req[r] is None]
+            cur = int(caches["_pos"])
+            if free and queue and cur < eng.ecfg.max_seq:
+                caches, pad_prefix, tok, finished, queue = self._swap_in(
+                    prompts, budgets, queue, free, cur, caches,
+                    pad_prefix, tok, finished, row_req, row_toks)
+                live = [r for r in range(B) if row_req[r] is not None]
+            # rows that stayed free (empty queue / no room): freeze
+            idle = [r for r in range(B) if row_req[r] is None]
+            if idle:
+                finished = finished.at[jnp.asarray(idle)].set(True)
+            # chunk length: capacity- and budget-capped, kept an ALIGN
+            # multiple so the shared counter stays aligned for swap-ins
+            max_rem = max(budgets[row_req[r]] - len(row_toks[r])
+                          for r in live)
+            steps = min(self.max_steps, eng.ecfg.max_seq - cur,
+                        ceil_align(max_rem))
+            if steps <= 0:
+                break                            # cache capacity reached
+            out = eng._fused(steps, start=False)(
+                eng.params, tok, caches, pad_prefix, key, finished)
+            caches, key = out["caches"], out["key"]
+            finished, tok = out["finished"], out["last_tok"]
+            self.stats["chunks"] += 1
+            chunk = np.asarray(out["tokens"])
+            for r in live:
+                row_toks[r].extend(chunk[r].tolist())
+        for r in range(B):
+            if row_req[r] is not None:           # capacity-truncated rows
+                self._finalize(row_req[r], row_toks[r],
+                               budgets[row_req[r]], results)
+        return queue
+
+    def _swap_in(self, prompts, budgets, queue, free, cur, caches,
+                 pad_prefix, tok, finished, row_req, row_toks):
+        """Re-prefill queued requests into freed rows at counter ``cur``.
+
+        FIFO: stops at the first queued request this wave cannot serve as
+        well as a fresh wave would — the prompt must fit into ``cur``
+        positions, and the remaining cache capacity must cover the
+        request's budget (or as much of it as a fresh wave could), so a
+        late swap-in is never capacity-truncated below what it would get
+        by waiting.
+        """
+        eng = self.engine
+        max_seq = eng.ecfg.max_seq
+        rows: List[int] = []
+        new_reqs: List[int] = []
+        new_ids: List[List[int]] = []
+        for r in free:
+            if not queue:
+                break
+            ids = eng.tok.encode(prompts[queue[0]])[: max_seq - ALIGN]
+            fresh_len = max(ALIGN, ceil_align(len(ids)))
+            fresh_cap = 1 + max_seq - fresh_len    # tok0 + decode room
+            need = min(budgets[queue[0]], fresh_cap)
+            if len(ids) > cur or 1 + max_seq - cur < need:
+                break
+            rows.append(r)
+            new_reqs.append(queue.pop(0))
+            new_ids.append(ids)
+        if not rows:
+            return caches, pad_prefix, tok, finished, queue
+        sub, sub_pp = eng._pad_batch(new_ids, cur)
+        lg_n, c_n = eng._prefill(eng.params, sub)
+        tok_n = eng._sample(lg_n, jax.random.PRNGKey(
+            eng.ecfg.seed + 1 + new_reqs[0]))
+        B = int(tok.shape[0])
+        caches = scatter_rows(caches, c_n, rows, B)
+        rows_arr = jnp.asarray(rows)
+        pad_prefix = pad_prefix.at[rows_arr].set(sub_pp)
+        tok = tok.at[rows_arr].set(tok_n)
+        finished = finished.at[rows_arr].set(tok_n == eng.tok.eos_id)
+        arr_n = np.asarray(tok_n)
+        for j, r in enumerate(rows):
+            row_req[r] = new_reqs[j]
+            row_toks[r] = [int(arr_n[j])]
+        self.stats["swaps"] += len(rows)
+        return caches, pad_prefix, tok, finished, queue
+
+
+__all__ = ["Engine", "EngineConfig", "ServeLoop", "scatter_rows", "ALIGN",
+           "ceil_align"]

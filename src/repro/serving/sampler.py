@@ -1,4 +1,11 @@
-"""Token samplers for the serving engine."""
+"""Token samplers for the serving engine.
+
+All samplers are trace-safe ``(logits (B, V), key) -> (B,) int32``
+functions, so they can run inside the fused on-device generation loop
+(``lm.generate_loop``) where the PRNG key is split once per scan step.
+``make_sampler`` builds the uniform-signature closure the engine and the
+fused loop share.
+"""
 from __future__ import annotations
 
 import jax
@@ -24,4 +31,16 @@ def top_k(logits: jax.Array, key: jax.Array, k: int = 40,
     return jax.random.categorical(key, lf / temp, axis=-1).astype(jnp.int32)
 
 
-__all__ = ["greedy", "temperature", "top_k"]
+def make_sampler(name: str, *, temperature_value: float = 0.8,
+                 k: int = 40):
+    """Uniform trace-safe ``(logits, key) -> (B,) int32`` closure."""
+    if name == "greedy":
+        return lambda lg, key: greedy(lg)
+    if name == "temperature":
+        return lambda lg, key: temperature(lg, key, temperature_value)
+    if name == "top_k":
+        return lambda lg, key: top_k(lg, key, k=k, temp=temperature_value)
+    raise ValueError(f"unknown sampler {name!r}")
+
+
+__all__ = ["greedy", "temperature", "top_k", "make_sampler"]

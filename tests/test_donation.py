@@ -1,0 +1,96 @@
+"""Buffer-donation regression tests: the decode hot path must mutate the
+packed asymmetric cache in place, never allocate a second copy.
+
+Pinned via ``jax.jit(...).lower(...).compile().memory_analysis()``:
+  * ``append_token``: every cache buffer is aliased input->output under
+    donation, and temp allocation is *flat* in ``max_seq`` (the
+    predicated-write form does slab-sized work; a whole-buffer
+    ``jnp.where`` select would make temps scale with the bulk region),
+  * the fused decode step and the fused generation loop: the whole packed
+    cache is aliased in place (alias bytes cover the cache bytes),
+  * donation is real: the donated cache buffers are deleted after the
+    call (reuse raises).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import kvcache
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.init import init_params
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=128,
+                  n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256,
+                  vocab_size=259, param_dtype="float32")
+
+
+def _mem(fn, *args, donate):
+    jitted = jax.jit(fn, donate_argnums=donate)
+    return jitted.lower(*args).compile().memory_analysis()
+
+
+def _cache_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def test_append_token_aliases_all_regions_and_flat_temp():
+    k = jnp.ones((2, 2, 32))
+    v = jnp.ones((2, 2, 32))
+    temps = {}
+    for max_seq in (256, 1024):
+        c = kvcache.init_cache(2, 2, 32, max_seq)
+        ma = _mem(kvcache.append_token, c, k, v, donate=0)
+        cb = kvcache.cache_bytes(c)
+        assert ma.alias_size_in_bytes >= cb, (
+            f"only {ma.alias_size_in_bytes}/{cb} cache bytes aliased")
+        temps[max_seq] = ma.temp_size_in_bytes
+        assert ma.temp_size_in_bytes < cb, (
+            "append temps as large as the cache itself")
+    assert temps[1024] == temps[256], (
+        f"append temp allocation scales with the cache: {temps} — a "
+        f"whole-buffer select snuck back into append_token")
+
+
+def _prefilled(max_seq=512):
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    toks = jnp.zeros((2, 32), jnp.int32)
+    _, caches = lm.prefill(params, CFG, toks, max_seq=max_seq)
+    pp = jnp.zeros((2,), jnp.int32)
+    tok = jnp.zeros((2,), jnp.int32)
+    return params, tok, caches, pp
+
+
+def test_fused_decode_step_no_second_cache_copy():
+    params, tok, caches, pp = _prefilled()
+    ma = _mem(lambda p, t, c, q: lm.decode_step(p, CFG, t, c, pad_prefix=q),
+              params, tok, caches, pp, donate=2)
+    cb = _cache_bytes(caches)
+    assert ma.alias_size_in_bytes >= cb, (
+        f"decode step aliases {ma.alias_size_in_bytes} < cache {cb} bytes "
+        f"— the packed cache is being copied")
+
+
+def test_fused_generate_loop_no_second_cache_copy():
+    params, tok, caches, pp = _prefilled()
+    key = jax.random.PRNGKey(0)
+
+    def loop(p, t, c, q, k):
+        return lm.generate_loop(p, CFG, c, num_steps=4, tok0=t, key=k,
+                                pad_prefix=q, eos_id=258)
+
+    ma = _mem(loop, params, tok, caches, pp, key, donate=2)
+    cb = _cache_bytes(caches)
+    assert ma.alias_size_in_bytes >= cb, (
+        f"fused loop aliases {ma.alias_size_in_bytes} < cache {cb} bytes")
+
+
+def test_donated_cache_is_consumed():
+    params, tok, caches, pp = _prefilled(max_seq=256)
+    f = jax.jit(lambda p, t, c, q: lm.decode_step(p, CFG, t, c,
+                                                  pad_prefix=q),
+                donate_argnums=2)
+    _, new_caches = f(params, tok, caches, pp)
+    jax.block_until_ready(jax.tree.leaves(new_caches))
+    with pytest.raises(RuntimeError, match="deleted"):
+        _ = jax.tree.leaves(caches["scan"]["attn"])[0] + 0

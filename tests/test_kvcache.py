@@ -120,3 +120,35 @@ def test_v_residual_group_roundtrip():
     got = vv[:, 128:160]
     # 8-bit BFP error: step = 2^(E-6) ~ 0.03 for N(0,1) groups
     assert float(jnp.abs(got - vr).max()) < 0.05
+
+
+def test_legacy_cache_ops_bit_identical():
+    """The legacy select/scatter formulations (the decode-throughput
+    benchmark baseline) and the predicated-write / overlay rewrites are
+    pure data-movement variants: bit-identical caches and gathers across
+    region boundaries (ring entry, demotion start, group commits,
+    partial residual, full cache)."""
+    rng = np.random.default_rng(3)
+    B, H, D, S = 2, 2, 32, 256
+    for prefill_len, extra in [(32, 0), (32, 65), (64, 33), (128, 95),
+                               (224, 31), (256, 0)]:
+        k = jnp.asarray(rng.normal(size=(B, prefill_len, H, D)
+                                   ).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(B, prefill_len, H, D)
+                                   ).astype(np.float32))
+        c_new = prefill_cache(init_cache(B, H, D, S), k, v)
+        c_old = c_new
+        for _ in range(extra):
+            kn = jnp.asarray(rng.normal(size=(B, H, D)).astype(np.float32))
+            vn = jnp.asarray(rng.normal(size=(B, H, D)).astype(np.float32))
+            c_new = append_token(c_new, kn, vn)
+            c_old = kvmod.append_token_select(c_old, kn, vn)
+        for a, b in zip(jax.tree.leaves(c_new), jax.tree.leaves(c_old)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for dt in (jnp.float32, jnp.bfloat16):
+            kn_, vn_, valn = gather_kv(c_new, dt)
+            ko_, vo_, valo = kvmod.gather_kv_select(c_old, dt)
+            np.testing.assert_array_equal(np.asarray(kn_), np.asarray(ko_))
+            np.testing.assert_array_equal(np.asarray(vn_), np.asarray(vo_))
+            np.testing.assert_array_equal(np.asarray(valn),
+                                          np.asarray(valo))

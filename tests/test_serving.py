@@ -42,6 +42,87 @@ def test_serve_loop_waves(engine):
     assert len(res) == 5 and all(isinstance(t, str) for t in res)
 
 
+def test_fused_loop_matches_host_loop(engine):
+    """The fused on-device loop is bit-exact with the per-step host loop
+    (EOS-truncated: the fused loop freezes finished rows to EOS)."""
+    prompts = ["hello", "another much longer prompt"]
+    host = engine.generate(prompts, fused=False)
+    fused = engine.generate(prompts, fused=True)
+    eos = engine.tok.eos_id
+    assert host["texts"] == fused["texts"]
+    for h, f in zip(host["tokens"], fused["tokens"]):
+        stop = np.where(h == eos)[0]
+        n = int(stop[0]) + 1 if len(stop) else len(h)
+        np.testing.assert_array_equal(h[:n], f[:n])
+        assert (f[n:] == eos).all()
+
+
+def test_empty_prompt_list_and_all_empty_prompts(engine):
+    out = engine.generate([])
+    assert out["texts"] == [] and out["tokens"].shape == (0, 8)
+    assert out["tokens_per_s"] == 0.0
+    # all-empty prompts: BOS-only rows padded to one ALIGN block
+    out = engine.generate(["", ""])
+    assert out["tokens"].shape == (2, 8)
+    assert len(out["texts"]) == 2
+    # mixed empty / non-empty rows behave like the solo non-empty run
+    solo = engine.generate(["hello"])["tokens"][0]
+    mixed = engine.generate(["hello", ""])["tokens"][0]
+    np.testing.assert_array_equal(solo, mixed)
+
+
+def test_throughput_accounting(engine):
+    out = engine.generate(["hello", "world"])
+    assert out["tokens_per_s"] > 0
+    assert 0 < out["useful_tokens_per_s"] <= out["tokens_per_s"] + 1e-9
+
+
+def test_continuous_batching_row_swap(engine):
+    """Rows that exhaust their budget are swapped for queued requests at
+    chunk boundaries without draining the batch."""
+    loop = ServeLoop(engine, batch_size=2, max_steps=32)
+    prompts = ["first", "second longer prompt", "third", "fourth"]
+    budgets = [5, 120, 20, 20]
+    res = loop.serve(prompts, max_new_tokens=budgets)
+    assert all(isinstance(t, str) for t in res)
+    assert loop.stats["swaps"] >= 1, loop.stats
+    assert loop.stats["chunks"] >= 2, loop.stats
+    # deterministic across runs
+    res2 = ServeLoop(engine, batch_size=2, max_steps=32).serve(
+        prompts, max_new_tokens=budgets)
+    assert res == res2
+    # first-wave rows (never swapped, same padding) match solo generation
+    solo = engine.generate(["first"], max_new_tokens=5)["texts"][0]
+    assert res[0] == solo
+
+
+def test_continuous_batching_budget_one_runs_no_chunks(engine):
+    """Rows satisfied by the prefill-sampled token are finalized before
+    any decode chunk is dispatched."""
+    loop = ServeLoop(engine, batch_size=2)
+    res = loop.serve(["a", "b", "c"], max_new_tokens=1)
+    assert loop.stats["chunks"] == 0
+    for prompt, text in zip(["a", "b", "c"], res):
+        assert text == engine.generate([prompt],
+                                       max_new_tokens=1)["texts"][0]
+
+
+def test_continuous_batching_defers_oversized_late_swaps(engine):
+    """A queued request whose budget exceeds the remaining wave capacity
+    waits for a fresh wave instead of being capacity-truncated."""
+    budgets = [5, 200, 200]
+    loop = ServeLoop(engine, batch_size=2, max_steps=32)
+    res = loop.serve(["p0", "p1", "p2"], max_new_tokens=budgets)
+    solo = ServeLoop(engine, batch_size=1).serve(["p2"],
+                                                 max_new_tokens=[200])
+    assert res[2] == solo[0]
+
+
+def test_generate_capacity_guard(engine):
+    with pytest.raises(ValueError, match="exceeds max_seq"):
+        engine.generate(["hello"], max_new_tokens=10_000)
+
+
 def test_cache_storage_accounting(engine):
     out = engine.generate(["hello"])
     cs = out["cache_stats"]
@@ -85,9 +166,11 @@ def test_pallas_kernel_path_matches_xla(engine):
            / float(jnp.abs(lg_x).max()))
     assert rel < 0.05, rel
     # one decode step on the same cache: same packed cache + pad masking
+    # (_decode donates its cache, so each call gets its own clone)
     tok = jnp.argmax(lg_x, -1)
-    dg_x, _ = engine._decode(params, tok, caches_x, pad_prefix)
-    dg_p, _ = e_pal._decode(params, tok, caches_x, pad_prefix)
+    clone = lambda: jax.tree.map(lambda a: a.copy(), caches_x)
+    dg_x, _ = engine._decode(params, tok, clone(), pad_prefix)
+    dg_p, _ = e_pal._decode(params, tok, clone(), pad_prefix)
     rel_d = (float(jnp.abs(dg_p - dg_x).max())
              / float(jnp.abs(dg_x).max()))
     assert rel_d < 0.05, rel_d
