@@ -182,9 +182,26 @@ def batch_pspec(mesh, batch_size: int) -> P:
 
 
 def cache_pspecs(caches_abstract, mesh, batch_size: int) -> Any:
-    """Heuristic cache sharding: the axis whose size == global batch goes
-    to (pod, data); the last model-divisible trailing axis (head_dim for
-    KV mantissas, state dim for SSM) goes to ``model``.
+    """Structure-aware cache sharding for the serving cache tree
+    (``{"scan": {kind: stacked}, "rem": [...], "_pos": ...}``).
+
+    Packed KV caches (``AsymKVCache`` / ``RingKVCache``, possibly
+    scan-stacked with leading ``(n_rep, c_k)`` axes) get field-aware
+    specs: the batch axis goes to (pod, data), the kv-head axis to
+    ``model`` (matching the column-sharded wk/wv producers, so decode
+    appends stay shard-local), falling back to the trailing
+    mantissa/head_dim axis when kv-heads are not divisible (GQA with
+    n_kv < model), and finally to replication.  Shared bookkeeping
+    (``length``, ring ``k_pos``, ``_pos``) is replicated — the engine
+    left-pads batches onto one position counter.  Packed 4-bit regions
+    (``k_bulk_mant`` pairs along head_dim, ``v_bulk_mant`` pairs along
+    the token axis) keep their full token extent per shard; only batch
+    and head axes are ever split, never token/group axes.
+
+    Other state leaves (SSM, RG-LRU, cross-attn enc K/V) use the generic
+    rule: batch axis read off the tree position ("scan" leaves carry two
+    leading stack axes, "rem" leaves none), last model-divisible
+    trailing axis to ``model``.
 
     Measured alternative (§Perf iteration 3b, REFUTED): sharding the
     token axis "flash-decoding style" looked better on paper (tiny
@@ -192,26 +209,52 @@ def cache_pspecs(caches_abstract, mesh, batch_size: int) -> Any:
     but the positional scatter that assembles init/bulk/ring regions
     then crosses shards — measured coll 0.79 -> 0.91 s and memory
     0.31 -> 0.43 s on qwen decode_32k, so head-dim sharding stays."""
+    from repro.core.kvcache import AsymKVCache
+    from repro.layers.attention import RingKVCache
+
     model = mesh.shape["model"]
     dp = dp_axes(mesh)
     dp_total = 1
     for a in dp:
         dp_total *= mesh.shape[a]
+    shard_batch = batch_size > 1 and _div(batch_size, dp_total)
+
+    def kv_cache_spec(c):
+        """Field-aware specs for one (possibly stacked) packed cache."""
+        lead = len(c[0].shape) - 4          # k_init_mant/k_mant: (B,T,H,D)
+        specs = []
+        for name, leaf in zip(type(c)._fields, c):
+            shp = getattr(leaf, "shape", ())
+            nd = len(shp)
+            spec = [None] * nd
+            if name in ("length", "k_pos") or nd <= lead:
+                specs.append(P(*spec))      # shared counters / positions
+                continue
+            if shard_batch and shp[lead] == batch_size:
+                spec[lead] = dp
+            h_ax = lead + (1 if name == "k_offsets" else 2)
+            if h_ax < nd and _div(shp[h_ax], model):
+                spec[h_ax] = "model"
+            elif nd == lead + 4 and _div(shp[-1], model):
+                spec[-1] = "model"          # head_dim fallback (mantissas)
+            specs.append(P(*spec))
+        return type(c)(*specs)
 
     def rule(path, leaf):
+        if isinstance(leaf, (AsymKVCache, RingKVCache)):
+            return kv_cache_spec(leaf)
         shp = getattr(leaf, "shape", ())
         nd = len(shp)
         if nd == 0:
             return P()
+        top = getattr(path[0], "key", None) if path else None
+        lead = 2 if top == "scan" else 0
         spec = [None] * nd
         b_ax = None
-        if batch_size > 1 and _div(batch_size, dp_total):
-            for i, s in enumerate(shp):
-                if s == batch_size:
-                    b_ax = i
-                    spec[i] = dp
-                    break
-        for i in range(nd - 1, -1, -1):
+        if shard_batch and nd > lead and shp[lead] == batch_size:
+            b_ax = lead
+            spec[lead] = dp
+        for i in range(nd - 1, lead - 1, -1):
             if i == b_ax:
                 continue
             if _div(shp[i], model):
@@ -219,7 +262,9 @@ def cache_pspecs(caches_abstract, mesh, batch_size: int) -> Any:
                 break
         return P(*spec)
 
-    return jax.tree_util.tree_map_with_path(rule, caches_abstract)
+    return jax.tree_util.tree_map_with_path(
+        rule, caches_abstract,
+        is_leaf=lambda x: isinstance(x, (AsymKVCache, RingKVCache)))
 
 
 def to_named(tree_of_pspecs, mesh):

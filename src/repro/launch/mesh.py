@@ -30,14 +30,27 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_debug_mesh(data: int = 2, model: int = 2):
-    """Small mesh for CI-scale distributed tests."""
+    """Small (data, model) mesh for CI-scale distributed tests and the
+    ``serve --mesh DxM`` flag.  Raises a RuntimeError naming the forced-
+    host-device recipe when the host exposes too few devices — callers
+    that want a skip instead should gate on :func:`mesh_available`."""
     n = data * model
     devices = jax.devices()
     if len(devices) < n:
-        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+        raise RuntimeError(
+            f"mesh ({data}, {model}) needs {n} devices, have "
+            f"{len(devices)} — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before the first "
+            f"jax import (or run on real hardware)")
     import numpy as np
     return jax.sharding.Mesh(
         np.asarray(devices[:n]).reshape(data, model), ("data", "model"))
+
+
+def mesh_available(data: int = 2, model: int = 2) -> bool:
+    """True when the host exposes enough devices for a (data, model)
+    debug mesh — the skip-gate for the multi-device test tier."""
+    return len(jax.devices()) >= data * model
 
 
 def dp_axes(mesh) -> tuple:
@@ -52,4 +65,5 @@ def dp_size(mesh) -> int:
     return n
 
 
-__all__ = ["make_production_mesh", "make_debug_mesh", "dp_axes", "dp_size"]
+__all__ = ["make_production_mesh", "make_debug_mesh", "mesh_available",
+           "dp_axes", "dp_size"]

@@ -10,10 +10,29 @@ asymmetric KV cache).  Generation runs through the fused on-device loop
 given; ``--continuous`` serves the prompts through the
 continuous-batching ``ServeLoop`` (finished rows swapped for queued
 requests at chunk boundaries) instead of one batched ``generate`` call.
+
+``--mesh DxM`` serves mesh-sharded: a (data=D, model=M) mesh over
+``jax.devices()`` with Megatron tensor parallelism on ``model`` and the
+batch + KV-cache rows on ``data`` (see ``distributed/sharding.py``).
+``--force-host-devices N`` forces N host CPU devices *before* jax
+initializes — the CI / laptop way to exercise a real multi-device mesh:
+
+  PYTHONPATH=src python -m repro.launch.serve --smoke \
+      --force-host-devices 8 --mesh 2x2
 """
 from __future__ import annotations
 
 import argparse
+import os
+import re
+
+
+def _parse_mesh(s: str):
+    m = re.fullmatch(r"(\d+)x(\d+)", s)
+    if not m:
+        raise argparse.ArgumentTypeError(
+            f"--mesh wants DATAxMODEL (e.g. 2x2), got {s!r}")
+    return int(m.group(1)), int(m.group(2))
 
 
 def main():
@@ -27,6 +46,14 @@ def main():
     ap.add_argument("--recipe", default="harmonia_kv4")
     ap.add_argument("--ckpt")
     ap.add_argument("--sampler", default="greedy")
+    ap.add_argument("--mesh", type=_parse_mesh, default=None,
+                    metavar="DxM",
+                    help="mesh-sharded serving over a (data=D, model=M) "
+                         "device mesh (e.g. 2x2)")
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    metavar="N",
+                    help="force N host CPU devices (XLA_FLAGS) before jax "
+                         "initializes — debug/CI meshes on one machine")
     ap.add_argument("--pallas", action="store_true",
                     help="serve through the grid-fused Pallas kernels "
                          "(prefill + 4-bit bulk decode)")
@@ -45,6 +72,10 @@ def main():
     if args.continuous and args.host_loop:
         ap.error("--continuous drives the fused continuation loop and "
                  "cannot run with --host-loop")
+    if args.force_host_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count="
+            f"{args.force_host_devices} " + os.environ.get("XLA_FLAGS", ""))
 
     import jax
 
@@ -54,9 +85,19 @@ def main():
     from repro.quant.int4 import pack_params
     from repro.serving.engine import Engine, EngineConfig, ServeLoop
 
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_debug_mesh
+        d, m = args.mesh
+        mesh = make_debug_mesh(d, m)
+        print(f"[serve] mesh-sharded: (data={d}, model={m}) over "
+              f"{len(jax.devices())} {jax.default_backend()} devices")
+
     spec = get_arch(args.arch)
     cfg = spec.smoke if args.smoke else spec.config
-    params = init_params(cfg, jax.random.PRNGKey(0))
+    # init directly onto the mesh so serving-scale weights never
+    # materialize unsharded on one device
+    params = init_params(cfg, jax.random.PRNGKey(0), mesh=mesh)
     if args.ckpt:
         from repro.checkpoint.manager import CheckpointManager
         mgr = CheckpointManager(args.ckpt)
@@ -70,7 +111,7 @@ def main():
         max_seq=args.max_seq, max_new_tokens=args.max_new,
         quant=get_recipe(args.recipe), sampler=args.sampler,
         use_pallas_kernels=args.pallas,
-        fused_loop=not args.host_loop))
+        fused_loop=not args.host_loop, mesh=mesh))
 
     if args.continuous:
         loop = ServeLoop(eng, batch_size=args.batch_size,

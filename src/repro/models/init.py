@@ -164,9 +164,15 @@ def _stack_blocks(key, cfg: ModelConfig, kind: str, count: int,
     return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
 
 
-def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+def init_params(cfg: ModelConfig, key: jax.Array, mesh=None) -> Dict:
     """Full parameter tree.  Use jax.eval_shape(init_params, cfg, key)
-    (with cfg static via partial) for allocation-free dry-runs."""
+    (with cfg static via partial) for allocation-free dry-runs.
+
+    ``mesh``: optional ``jax.sharding.Mesh`` — the tree is placed
+    according to :func:`repro.distributed.sharding.param_pspecs`
+    (Megatron column/row sharding on the ``model`` axis) instead of
+    living replicated on device 0, so serving-scale models never
+    materialize unsharded."""
     dt = _dtype(cfg)
     ks = jax.random.split(key, 8)
     params: Dict = {
@@ -190,7 +196,17 @@ def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
         params["enc_blocks"] = _stack_blocks(ks[3], enc_cfg, "attn",
                                              cfg.encoder_layers)
         _norm_params(enc_cfg, "enc_final_norm", params, dt)
+    if mesh is not None:
+        params = shard_params(params, cfg, mesh)
     return params
+
+
+def shard_params(params: Dict, cfg: ModelConfig, mesh) -> Dict:
+    """Place a (possibly INT4-packed) param tree on ``mesh`` per
+    ``param_pspecs`` — the serving engine's weight placement."""
+    from repro.distributed.sharding import param_pspecs, to_named
+    return jax.device_put(params,
+                          to_named(param_pspecs(cfg, params, mesh), mesh))
 
 
 def _encoder_view(cfg: ModelConfig) -> ModelConfig:
@@ -206,5 +222,5 @@ def abstract_params(cfg: ModelConfig):
     return jax.eval_shape(partial(init_params, cfg), key)
 
 
-__all__ = ["init_params", "abstract_params", "init_block", "init_mlp",
-           "_encoder_view"]
+__all__ = ["init_params", "shard_params", "abstract_params", "init_block",
+           "init_mlp", "_encoder_view"]

@@ -491,7 +491,8 @@ def generate_loop(params, cfg: ModelConfig, caches, *, num_steps: int,
                   pad_prefix: Optional[jax.Array] = None,
                   unroll: bool = False, seq_shard: bool = False,
                   dp_axes: tuple = ("data",),
-                  use_pallas: bool = False) -> Dict[str, Any]:
+                  use_pallas: bool = False,
+                  cache_shardings: Any = None) -> Dict[str, Any]:
     """Fused on-device generation: one ``lax.scan`` whose body embeds the
     carried token, runs a decode step (which appends to the carried
     caches), samples the next token and updates per-row finished masks —
@@ -511,6 +512,11 @@ def generate_loop(params, cfg: ModelConfig, caches, *, num_steps: int,
 
     ``sample_fn(logits, key) -> (B,) int32`` must be trace-safe (the
     repro.serving.sampler functions all are); it defaults to greedy.
+    ``cache_shardings``: optional pytree of ``NamedSharding`` matching
+    ``caches`` — applied to the carried caches inside the scan body so
+    GSPMD keeps the mesh-sharded cache layout (batch on data, kv-heads
+    on model) stable across steps instead of resharding or gathering a
+    replicated copy mid-loop.
     ``eos_id``: when set, a row that has emitted EOS keeps stepping (the
     packed cache shares one position counter, so shapes stay static) but
     both its fed-back and emitted tokens are frozen to ``eos_id``; when
@@ -558,6 +564,9 @@ def generate_loop(params, cfg: ModelConfig, caches, *, num_steps: int,
                              pad_prefix=pad_prefix, unroll=unroll,
                              seq_shard=seq_shard, dp_axes=dp_axes,
                              use_pallas=use_pallas)
+        if cache_shardings is not None:
+            cs = jax.tree.map(jax.lax.with_sharding_constraint, cs,
+                              cache_shardings)
         nxt = sample_fn(lg, sk).astype(jnp.int32)
         if eos_id is not None:
             nxt = jnp.where(fin, jnp.int32(eos_id), nxt)

@@ -19,6 +19,18 @@ with queued requests into the freed cache rows at chunk boundaries (the
 shared position counter stays GROUP-aligned because chunks are ALIGN
 multiples).
 
+Mesh-sharded serving (``EngineConfig.mesh``): when a ``jax.sharding.Mesh``
+is configured, params are placed per ``distributed.sharding.param_pspecs``
+(Megatron column/row tensor parallelism on the ``model`` axis — GSPMD
+inserts the single all-reduce per O/down projection), the packed KV cache
+per ``cache_pspecs`` (batch rows on the data axis, kv-heads — or head_dim
+for non-divisible GQA — on ``model``) and the prompt batch per
+``batch_pspec``.  Prefill, the per-token decode step, the fused loops and
+the continuous-batching row swap are jitted with explicit
+``in_shardings``/``out_shardings`` plus cache donation, so the cache is
+born sharded at prefill and stays sharded and in place across every decode
+step and row swap — it is never gathered to a replicated copy.
+
 Throughput accounting reports raw tokens/s (every decoded position),
 ``useful_tokens_per_s`` (EOS-truncated) and the modeled HBM traffic saved
 by the 4-bit bulk cache (fp16 baseline vs packed actual).
@@ -27,7 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +79,10 @@ class EngineConfig:
     # for the whole decode, donated in-place cache).  ``False`` restores
     # the per-token host loop (kept for regression/benchmarks).
     fused_loop: bool = True
+    # Optional jax.sharding.Mesh with ("data", "model") (+"pod") axes:
+    # mesh-sharded tensor-parallel serving (see module docstring).  None
+    # keeps the single-device path byte-for-byte unchanged.
+    mesh: Optional[Any] = None
 
 
 def scatter_rows(dst, src, rows: Sequence[int], batch: int):
@@ -85,7 +101,7 @@ def scatter_rows(dst, src, rows: Sequence[int], batch: int):
     n = len(rows)
     if n == batch:
         raise ValueError("full-batch scatter: replace the cache instead")
-    rows_arr = jnp.asarray(list(rows))
+    rows_arr = jnp.asarray(rows)     # list of ints or a (traced) array
 
     def leaf(d, s):
         if d.shape == s.shape:
@@ -103,11 +119,21 @@ def scatter_rows(dst, src, rows: Sequence[int], batch: int):
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig):
-        self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
         self.quant = ecfg.quant or harmonia(4)
         self.tok = ByteTokenizer()
+        self.mesh = ecfg.mesh
+        self._param_sh = None
+        self._cache_sh: Dict[int, Any] = {}   # batch -> NamedSharding tree
+        self._mesh_jits: Dict = {}
+        if self.mesh is not None:
+            from repro.distributed import sharding as dshard
+            self._dshard = dshard
+            self._param_sh = dshard.to_named(
+                dshard.param_pspecs(cfg, params, self.mesh), self.mesh)
+            params = jax.device_put(params, self._param_sh)
+        self.params = params
         self._prefill = jax.jit(
             lambda p, t: lm.prefill(p, cfg, t, max_seq=ecfg.max_seq,
                                     quant=self.quant,
@@ -121,21 +147,144 @@ class Engine:
             donate_argnums=2)
         self._sample: Callable = sampler_lib.make_sampler(
             ecfg.sampler, temperature_value=ecfg.temperature)
+        if self.mesh is not None:
+            # Fence the sampler into a replicated subgraph: constrain its
+            # logits input AND its token output (works both eagerly and
+            # inside the fused loop's trace).  Without both fences GSPMD
+            # propagates the batch sharding of neighbouring ops into the
+            # sampler's threefry computation, and the non-partitionable
+            # RNG draws *different bits* when partitioned — sampled
+            # tokens silently diverge from the unsharded engine even
+            # though the logits agree (observed: a batch-sharded
+            # categorical flips tokens with top-2 gaps of O(1)).  The
+            # all-gather this inserts is one (B, V) fp32 per step —
+            # noise next to a decode step.
+            raw_sample, rep = self._sample, self._rep_sh()
+
+            def _sample_replicated(lg, k):
+                tok = raw_sample(
+                    jax.lax.with_sharding_constraint(lg, rep), k)
+                return jax.lax.with_sharding_constraint(tok, rep)
+            self._sample = _sample_replicated
         self._loops: Dict = {}
 
-    def _fused(self, num_steps: int, start: bool):
+    # -- mesh-sharded jit builders ---------------------------------------
+    # Small per-row arrays (token, pad_prefix, finished) deliberately get
+    # no pinned in_shardings: the ServeLoop mutates them eagerly between
+    # chunks (``.at[rows].set``), and a pinned spec would reject the
+    # committed result — GSPMD infers their layout from the batch-sharded
+    # logits instead.  Params and caches, the two large operands, are
+    # always pinned; every cache producer also pins out_shardings, so the
+    # cache's sharding is invariant along prefill -> loop -> swap chains
+    # and donation aliases shard buffers in place.
+
+    def _named(self, spec):
+        from jax.sharding import NamedSharding
+        return NamedSharding(self.mesh, spec)
+
+    def _batch_sh(self, B: int):
+        return self._named(self._dshard.batch_pspec(self.mesh, B))
+
+    def _rep_sh(self):
+        from jax.sharding import PartitionSpec as P
+        return self._named(P())
+
+    def cache_shardings(self, B: int):
+        """NamedSharding tree for the batch-``B`` serving cache (memoized;
+        cache shapes depend only on batch and ``max_seq``)."""
+        if B not in self._cache_sh:
+            toks = jax.ShapeDtypeStruct((B, ALIGN), jnp.int32)
+            _, acaches = jax.eval_shape(
+                lambda p, t: lm.prefill(p, self.cfg, t,
+                                        max_seq=self.ecfg.max_seq,
+                                        quant=self.quant),
+                self.params, toks)
+            specs = self._dshard.cache_pspecs(acaches, self.mesh, B)
+            self._cache_sh[B] = self._dshard.to_named(specs, self.mesh)
+        return self._cache_sh[B]
+
+    def prefill(self, toks):
+        """Prefill dispatch: the plain jit, or the mesh-sharded jit whose
+        out_shardings make the cache *born* sharded."""
+        if self.mesh is None:
+            return self._prefill(self.params, toks)
+        B, S = toks.shape
+        key = ("prefill", B, S)
+        if key not in self._mesh_jits:
+            self._mesh_jits[key] = jax.jit(
+                lambda p, t: lm.prefill(p, self.cfg, t,
+                                        max_seq=self.ecfg.max_seq,
+                                        quant=self.quant,
+                                        use_pallas=self.ecfg.use_pallas_kernels),
+                in_shardings=(self._param_sh, self._batch_sh(B)),
+                out_shardings=(self._batch_sh(B), self.cache_shardings(B)))
+        return self._mesh_jits[key](self.params, toks)
+
+    def decode(self, tok, caches, pad_prefix):
+        """One decode step (host-loop path) under the active placement."""
+        if self.mesh is None:
+            return self._decode(self.params, tok, caches, pad_prefix)
+        B = int(tok.shape[0])
+        key = ("decode", B)
+        if key not in self._mesh_jits:
+            c_sh = self.cache_shardings(B)
+            self._mesh_jits[key] = jax.jit(
+                lambda p, t, c, pp: lm.decode_step(
+                    p, self.cfg, t, c, quant=self.quant, pad_prefix=pp,
+                    use_pallas=self.ecfg.use_pallas_kernels),
+                in_shardings=(self._param_sh, None, c_sh, None),
+                out_shardings=(self._batch_sh(B), c_sh),
+                donate_argnums=2)
+        return self._mesh_jits[key](self.params, tok, caches, pad_prefix)
+
+    def scatter_cache_rows(self, dst, src, rows: Sequence[int], batch: int):
+        """Sharding-preserving continuous-batching row swap.  Under a mesh
+        the per-row updates run as a jitted scatter with both cache trees'
+        shardings pinned and the destination donated — the sharded cache
+        is patched on-device, never gathered to host or to a replicated
+        copy."""
+        if self.mesh is None:
+            return scatter_rows(dst, src, rows, batch)
+        key = ("scatter", batch, len(rows))
+        if key not in self._mesh_jits:
+            c_sh = self.cache_shardings(batch)
+            self._mesh_jits[key] = jax.jit(
+                lambda d, s, r: scatter_rows(d, s, r, batch),
+                in_shardings=(c_sh, self.cache_shardings(len(rows)), None),
+                out_shardings=c_sh, donate_argnums=0)
+        return self._mesh_jits[key](dst, src, jnp.asarray(list(rows)))
+
+    def _fused(self, num_steps: int, start: bool,
+               batch: Optional[int] = None):
         """Memoized jitted fused loop (cache donated).
 
         ``start=True``: takes prefill logits, emits ``num_steps`` tokens
         (first sampled from the logits).  ``start=False``: continuation —
         takes the last emitted token + finished mask, emits ``num_steps``
-        decode tokens (the ServeLoop chunk primitive).
+        decode tokens (the ServeLoop chunk primitive).  ``batch`` is
+        required under a mesh (shardings are built per batch size).
         """
-        memo_key = (num_steps, start)
+        memo_key = (num_steps, start, batch if self.mesh is not None
+                    else None)
         if memo_key not in self._loops:
             common = dict(num_steps=num_steps, sample_fn=self._sample,
                           eos_id=self.tok.eos_id, quant=self.quant,
                           use_pallas=self.ecfg.use_pallas_kernels)
+            jit_kw: Dict = {}
+            if self.mesh is not None:
+                if batch is None:
+                    raise ValueError("mesh-sharded fused loop needs the "
+                                     "batch size")
+                c_sh = self.cache_shardings(batch)
+                b_sh = self._batch_sh(batch)
+                common["cache_shardings"] = c_sh
+                out_sh = {"tokens": b_sh, "caches": c_sh, "finished": b_sh,
+                          "last_tok": b_sh, "key": self._rep_sh()}
+                n_in = 5 if start else 6
+                jit_kw = dict(
+                    in_shardings=(self._param_sh, None, c_sh)
+                    + (None,) * (n_in - 3),
+                    out_shardings=out_sh)
             if start:
                 def f(p, logits0, caches, pp, key):
                     return lm.generate_loop(p, self.cfg, caches,
@@ -147,7 +296,7 @@ class Engine:
                                             tok0=tok, key=key,
                                             finished=finished,
                                             pad_prefix=pp, **common)
-            self._loops[memo_key] = jax.jit(f, donate_argnums=2)
+            self._loops[memo_key] = jax.jit(f, donate_argnums=2, **jit_kw)
         return self._loops[memo_key]
 
     # -- batching --
@@ -206,9 +355,9 @@ class Engine:
         key = jax.random.PRNGKey(self.ecfg.seed)
 
         t0 = time.time()
-        logits, caches = self._prefill(self.params, toks)
+        logits, caches = self.prefill(toks)
         if fused:
-            out = self._fused(m, start=True)(
+            out = self._fused(m, start=True, batch=B)(
                 self.params, logits, caches, pad_prefix, key)
             gen = out["tokens"]
             caches = out["caches"]
@@ -218,8 +367,7 @@ class Engine:
             out_list.append(tok)
             for _ in range(m - 1):
                 key, sk = jax.random.split(key)
-                logits, caches = self._decode(self.params, tok, caches,
-                                              pad_prefix)
+                logits, caches = self.decode(tok, caches, pad_prefix)
                 tok = self._sample(logits, sk)
                 out_list.append(tok)
             gen = jnp.stack(out_list, axis=1)
@@ -314,7 +462,7 @@ class ServeLoop:
         wave, queue = queue[:B], queue[B:]
         toks, pad_prefix = eng._prepare([prompts[i] for i in wave])
         key = jax.random.PRNGKey(eng.ecfg.seed)
-        logits, caches = eng._prefill(eng.params, toks)
+        logits, caches = eng.prefill(toks)
         tok = eng._sample(logits, key)          # first token of every row
         eos = eng.tok.eos_id
         finished = tok == eos
@@ -356,7 +504,7 @@ class ServeLoop:
                         ceil_align(max_rem))
             if steps <= 0:
                 break                            # cache capacity reached
-            out = eng._fused(steps, start=False)(
+            out = eng._fused(steps, start=False, batch=B)(
                 eng.params, tok, caches, pad_prefix, key, finished)
             caches, key = out["caches"], out["key"]
             finished, tok = out["finished"], out["last_tok"]
@@ -401,11 +549,11 @@ class ServeLoop:
         if not rows:
             return caches, pad_prefix, tok, finished, queue
         sub, sub_pp = eng._pad_batch(new_ids, cur)
-        lg_n, c_n = eng._prefill(eng.params, sub)
+        lg_n, c_n = eng.prefill(sub)
         tok_n = eng._sample(lg_n, jax.random.PRNGKey(
             eng.ecfg.seed + 1 + new_reqs[0]))
         B = int(tok.shape[0])
-        caches = scatter_rows(caches, c_n, rows, B)
+        caches = eng.scatter_cache_rows(caches, c_n, rows, B)
         rows_arr = jnp.asarray(rows)
         pad_prefix = pad_prefix.at[rows_arr].set(sub_pp)
         tok = tok.at[rows_arr].set(tok_n)

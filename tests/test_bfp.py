@@ -85,21 +85,126 @@ def test_padding_of_ragged_axis():
     assert jnp.allclose(fq, x, atol=1e-2)
 
 
+# ---------------------------------------------------------------------------
+# Quantize/dequantize invariants.  Each property lives in a plain checker
+# exercised by an always-run seeded test; when hypothesis is installed the
+# same checkers also run under generated inputs (pyproject `test` extra).
+# ---------------------------------------------------------------------------
+
+def _check_roundtrip_error_bound(x: np.ndarray, m_bits: int):
+    """|x - q(x)| <= truncation step derived from the group absmax, and
+    the bound tightens with mantissa width."""
+    xj = jnp.asarray(x)[None, :]
+    fq = bfp.bfp_fake_quant(xj, 32, m_bits)
+    absmax = float(jnp.max(jnp.abs(xj)))
+    if absmax == 0:
+        assert jnp.all(fq == 0)
+        return
+    # mirror _shared_exponent's float32 log2: f64 floor(log2) disagrees
+    # by one just below powers of two (e.g. nextafter(2048, 0))
+    E = np.clip(np.floor(np.log2(np.float32(absmax))), bfp.EXP_MIN,
+                bfp.EXP_MAX)
+    step = 2.0 ** (float(E) - (m_bits - 2))
+    assert float(jnp.max(jnp.abs(xj - fq))) <= step * (1 + 1e-5) + 1e-6
+
+
+def _check_shared_exponent_dominance(x: np.ndarray):
+    """The group absmax dictates everyone's scale: the stored exponent is
+    floor(log2(absmax)) (clipped), and any element smaller than the
+    implied step truncates to exactly zero — the 'outlier flattens its
+    group' behaviour the smoothing machinery exists to fight."""
+    xj = jnp.asarray(x)[None, :]
+    mant, exp = bfp.bfp_quantize(xj, 32, 8)
+    absmax = float(np.max(np.abs(x)))
+    if absmax == 0:
+        assert int(exp.reshape(-1)[0]) == bfp.EXP_MIN
+        return
+    # float32 log2, matching the implementation (see error-bound checker)
+    expect = int(np.clip(np.floor(np.log2(np.float32(absmax))),
+                         bfp.EXP_MIN, bfp.EXP_MAX))
+    assert int(exp.reshape(-1)[0]) == expect
+    step = 2.0 ** (expect - 6)               # 8-bit mantissa step
+    fq = np.asarray(bfp.bfp_fake_quant(xj, 32, 8))[0]
+    assert np.all(fq[np.abs(x) < step] == 0)
+
+
+def _check_sign_preservation(x: np.ndarray, m_bits: int):
+    """Truncation toward zero never flips a sign: q(x) is 0 or has the
+    sign of x, elementwise."""
+    fq = np.asarray(bfp.bfp_fake_quant(jnp.asarray(x)[None, :], 32,
+                                       m_bits))[0]
+    assert np.all((fq == 0) | (np.sign(fq) == np.sign(x)))
+
+
+def _check_idempotence(x: np.ndarray, m_bits: int):
+    """Quantizing an already-quantized block is the identity: q(x) stays
+    on the BFP grid (truncation cannot drop the group absmax below the
+    shared-exponent bucket floor, so the grid is unchanged)."""
+    xj = jnp.asarray(x)[None, :]
+    q1 = bfp.bfp_fake_quant(xj, 32, m_bits)
+    q2 = bfp.bfp_fake_quant(q1, 32, m_bits)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+_BITS = (2, 4, 6, 8)
+
+
+def test_property_roundtrip_error_bound_seeded():
+    rng = np.random.default_rng(10)
+    for m_bits in _BITS:
+        for scale in (1e-3, 1.0, 1e4):
+            _check_roundtrip_error_bound(
+                (rng.normal(size=32) * scale).astype(np.float32), m_bits)
+    _check_roundtrip_error_bound(np.zeros(32, np.float32), 4)
+
+
+def test_property_shared_exponent_dominance_seeded():
+    rng = np.random.default_rng(11)
+    for _ in range(8):
+        x = rng.normal(size=32).astype(np.float32)
+        x[int(rng.integers(32))] *= 1e3      # planted outlier
+        _check_shared_exponent_dominance(x)
+    _check_shared_exponent_dominance(np.zeros(32, np.float32))
+
+
+def test_property_sign_preservation_seeded():
+    rng = np.random.default_rng(12)
+    for m_bits in _BITS:
+        _check_sign_preservation(
+            (rng.normal(size=32) * 100).astype(np.float32), m_bits)
+
+
+def test_property_idempotence_seeded():
+    rng = np.random.default_rng(13)
+    for m_bits in _BITS:
+        for scale in (1e-4, 1.0, 1e4):
+            _check_idempotence(
+                (rng.normal(size=32) * scale).astype(np.float32), m_bits)
+
+
 if given is not None:
+    _vals = st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
+                     min_size=32, max_size=32)
+
     @settings(max_examples=30, deadline=None)
-    @given(st.integers(2, 10),
-           st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
-                    min_size=32, max_size=32))
+    @given(st.integers(2, 10), _vals)
     def test_hypothesis_error_bound(m_bits, vals):
-        x = jnp.asarray(np.array(vals, np.float32))[None, :]
-        fq = bfp.bfp_fake_quant(x, 32, m_bits)
-        absmax = float(jnp.max(jnp.abs(x)))
-        if absmax == 0:
-            assert jnp.all(fq == 0)
-            return
-        E = np.clip(np.floor(np.log2(absmax)), bfp.EXP_MIN, bfp.EXP_MAX)
-        step = 2.0 ** (E - (m_bits - 2))
-        assert float(jnp.max(jnp.abs(x - fq))) <= step * (1 + 1e-5) + 1e-6
+        _check_roundtrip_error_bound(np.array(vals, np.float32), m_bits)
+
+    @settings(max_examples=30, deadline=None)
+    @given(_vals)
+    def test_hypothesis_shared_exponent_dominance(vals):
+        _check_shared_exponent_dominance(np.array(vals, np.float32))
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 10), _vals)
+    def test_hypothesis_sign_preservation(m_bits, vals):
+        _check_sign_preservation(np.array(vals, np.float32), m_bits)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 10), _vals)
+    def test_hypothesis_idempotence(m_bits, vals):
+        _check_idempotence(np.array(vals, np.float32), m_bits)
 
     @settings(max_examples=20, deadline=None)
     @given(st.integers(0, 2**31 - 1))
@@ -109,6 +214,15 @@ if given is not None:
         assert jnp.all(bfp.unpack_int4(bfp.pack_int4(m, -1), -1) == m)
 else:
     def test_hypothesis_error_bound():
+        pytest.importorskip("hypothesis")
+
+    def test_hypothesis_shared_exponent_dominance():
+        pytest.importorskip("hypothesis")
+
+    def test_hypothesis_sign_preservation():
+        pytest.importorskip("hypothesis")
+
+    def test_hypothesis_idempotence():
         pytest.importorskip("hypothesis")
 
     def test_hypothesis_pack_roundtrip():

@@ -80,11 +80,69 @@ def test_cache_pspecs_shard_batch_and_tail():
     assert "data" in str(k_spec) or ("data",) in tuple(k_spec)
 
 
+def test_cache_pspecs_overlay_slab_layout():
+    """Field-aware specs on the PR 2 overlay/slab cache layout: batch at
+    the scan-stacked axis 2, kv-heads (divisible) on model for every
+    packed region incl. the 4-bit k/v bulk, shared counters and ring
+    positions replicated."""
+    from functools import partial
+    from repro.models import lm
+    # gemma2 smoke alternates local_attn (ring cache) and attn (packed)
+    cfg = get_arch("gemma2-2b").config  # n_kv_heads=4: divisible by 16?
+    mesh = FakeMesh(data=4, model=4)
+    caches = jax.eval_shape(partial(lm.init_decode_caches, cfg, 16, 8192))
+    specs = cache_pspecs(caches, mesh, 16)
+    attn = specs["scan"]["attn"]
+    for name in ("k_init_mant", "k_bulk_mant", "v_bulk_mant",
+                 "v_local_exp"):
+        s = tuple(getattr(attn, name))
+        assert s[2] == ("data",), (name, s)      # batch under the stack
+        assert "model" in s, (name, s)           # kv-heads sharded
+        assert s[3] is None, (name, s)           # token axis never split
+    assert tuple(attn.length) == (None, None)    # shared counter
+    ring = specs["scan"]["local_attn"]
+    assert all(a is None for a in tuple(ring.k_pos))
+    assert tuple(specs["_pos"]) == ()
+
+
+def test_cache_pspecs_gqa_head_dim_fallback():
+    """kv-heads not divisible by model (GQA) -> mantissa slabs fall back
+    to head_dim sharding; exponent leaves whose trailing dim is hd//32
+    degrade to replication rather than erroring."""
+    from functools import partial
+    from repro.models import lm
+    cfg = get_arch("gemma2-2b").smoke          # n_kv_heads=1, head_dim=32
+    mesh = FakeMesh(data=2, model=2)
+    caches = jax.eval_shape(partial(lm.init_decode_caches, cfg, 4, 128))
+    specs = cache_pspecs(caches, mesh, 4)
+    attn = specs["scan"]["attn"]
+    assert tuple(attn.k_init_mant)[-1] == "model"      # hd=32 % 2 == 0
+    assert "model" not in tuple(attn.k_init_exp)       # hd//32=1: replicate
+
+
+def test_divisibility_degrades_to_replication():
+    """Non-divisible dims must degrade to replication, never error or
+    pad: whisper's 51866 vocab against a model axis that divides neither
+    vocab nor d_model leaves the embedding fully replicated."""
+    cfg = get_arch("whisper-large-v3").config   # vocab 51866, d_model 1280
+    ap = abstract_params(cfg)
+    mesh = FakeMesh(data=2, model=48)           # 51866 % 48, 1280 % 48 != 0
+    specs = param_pspecs(cfg, ap, mesh)
+    assert tuple(specs["embed"]) == (), specs["embed"]
+    # under the production mesh the vocab still doesn't divide 16 but the
+    # d_model axis does -> the documented d-shard fallback, not an error
+    specs16 = param_pspecs(cfg, ap, MESH)
+    emb = tuple(specs16["embed"])
+    assert 51866 % 16 != 0 and "model" in emb and emb[0] is None, emb
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs >= 4 devices: run under XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8 (multidevice tier) "
+           "or the dryrun sweep")
 def test_debug_mesh_end_to_end():
-    """Real 4-device jit on a forced-multi-device subprocess-free path:
-    only runs when the host exposes >= 4 devices (dryrun sets 512)."""
-    if len(jax.devices()) < 4:
-        pytest.skip("single-device host; covered by dryrun sweep")
+    """Real 4-device jit on a forced-multi-device subprocess-free path."""
     from repro.launch.mesh import make_debug_mesh
     mesh = make_debug_mesh(2, 2)
     x = jnp.arange(16.0).reshape(4, 4)
@@ -92,3 +150,14 @@ def test_debug_mesh_end_to_end():
                 in_shardings=jax.NamedSharding(mesh, P("data", "model"))
                 )(x)
     np.testing.assert_array_equal(np.asarray(y), np.asarray(x) * 2)
+
+
+def test_make_debug_mesh_clear_error_when_underprovisioned():
+    """make_debug_mesh must fail loudly with the forced-host recipe in
+    the message (not a bare device-count assert) so the multi-device
+    tier's skip reasons stay actionable."""
+    from repro.launch.mesh import make_debug_mesh, mesh_available
+    need = len(jax.devices()) + 1
+    assert not mesh_available(need, 1)
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        make_debug_mesh(need, 1)
