@@ -5,10 +5,10 @@ Old vs new, like ``kernels_micro``'s legacy escape hatches:
 
   * host loop (baseline) — the pre-fused-loop serving path: one
     ``jax.jit`` dispatch per token (no cache donation, so every step
-    materializes a second packed cache), the select-based
-    ``append_token_select`` + scatter-based ``gather_kv_select`` cache
-    ops (``legacy_cache=True``), and an eager host-side sample and PRNG
-    split between steps.
+    materializes a second packed cache), the select-based append +
+    scatter-based gather cache ops (``legacy_cache=True``, i.e.
+    ``kvcache.append_token/gather_kv(..., legacy=True)``), and an eager
+    host-side sample and PRNG split between steps.
   * fused loop — ``lm.generate_loop``: the whole generation is a single
     jitted ``lax.scan`` with the cache donated and mutated in place via
     predicated writes, and the overlay-based gather.

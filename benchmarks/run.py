@@ -1,16 +1,29 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines.  ``--fast`` trims sweeps
-(CI); default runs the full grids.
+Prints ``name,us_per_call,derived`` CSV lines and writes a consolidated
+``BENCH_summary.json`` at the repo root (per-module status, wall time and
+returned metrics) so the perf trajectory is machine-readable across PRs
+without scraping per-module JSONs.  ``--fast`` trims sweeps (CI); default
+runs the full grids.
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig4,...]
+
+``serve_scaling`` needs forced-host devices before the first jax import;
+under the orchestrator (where an earlier module usually imported jax
+already) it is skipped with that recipe unless 8 devices are visible —
+run it standalone or via the CI multidevice job.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+SUMMARY_JSON = os.path.join(REPO_ROOT, "BENCH_summary.json")
 
 MODULES = [
     ("fig4", "benchmarks.fig4_bfp_sweep"),
@@ -24,7 +37,19 @@ MODULES = [
     ("fig19", "benchmarks.fig19_seqlen"),
     ("kernels", "benchmarks.kernels_micro"),
     ("decode", "benchmarks.decode_throughput"),
+    ("serve", "benchmarks.serve_scaling"),
 ]
+
+
+def _skip_reason(key: str) -> str | None:
+    if key == "serve":
+        import jax
+        if jax.device_count() < 8:
+            return ("needs 8 forced-host devices: run `PYTHONPATH=src "
+                    "python -m benchmarks.serve_scaling` standalone (it "
+                    "sets XLA_FLAGS before importing jax) or the CI "
+                    "multidevice job")
+    return None
 
 
 def main() -> None:
@@ -36,19 +61,42 @@ def main() -> None:
 
     only = set(args.only.split(",")) if args.only else None
     failures = []
+    # record the filter: a partial --only run must be distinguishable
+    # from a full sweep when reading the trajectory file later
+    summary = {"meta": {"fast": args.fast,
+                        "only": sorted(only) if only else None,
+                        "started_unix": int(time.time())},
+               "modules": {}}
     print("name,us_per_call,derived")
     for key, modname in MODULES:
         if only and key not in only:
             continue
         t0 = time.time()
+        reason = _skip_reason(key)
+        if reason is not None:
+            summary["modules"][key] = {"status": "skipped",
+                                       "reason": reason}
+            print(f"{key}.TOTAL,0,SKIPPED:{reason}")
+            continue
         try:
             mod = __import__(modname, fromlist=["main"])
-            mod.main(fast=args.fast)
+            result = mod.main(fast=args.fast)
+            entry = {"status": "ok",
+                     "seconds": round(time.time() - t0, 2)}
+            if isinstance(result, dict):
+                entry["result"] = result
+            summary["modules"][key] = entry
             print(f"{key}.TOTAL,{(time.time()-t0)*1e6:.0f},ok")
         except Exception as e:
             traceback.print_exc()
             failures.append((key, repr(e)))
+            summary["modules"][key] = {
+                "status": "failed", "error": repr(e),
+                "seconds": round(time.time() - t0, 2)}
             print(f"{key}.TOTAL,{(time.time()-t0)*1e6:.0f},FAILED:{e!r}")
+    with open(SUMMARY_JSON, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"# wrote {os.path.normpath(SUMMARY_JSON)}")
     if failures:
         print(f"# {len(failures)} benchmark(s) failed: "
               f"{[k for k, _ in failures]}", file=sys.stderr)

@@ -37,6 +37,13 @@ Token-to-region map at length L (0-indexed token t):
   V: group g = t//32; g == 0 -> init; complete groups {cg-1, cg-2} (>=1)
      -> local ring slot g%2; groups [1, cg-3] -> bulk; tokens >= 32*cg
      -> resid, where cg = L//32.
+
+Every bulk buffer is *bulk-relative*: K slot j holds token 32+j, V mantissa
+slot j holds token 32+j (nibble-packed in pairs along the token axis) and
+``v_bulk_exp`` slot j holds group j+1 — the layout the decode kernels index
+directly, so no per-step shift/concat re-layout of exponents exists
+anywhere on the decode path (it used to cost an O(B.S/32.H.hd) copy per
+layer per step).
 """
 from __future__ import annotations
 
@@ -120,7 +127,8 @@ class AsymKVCache(NamedTuple):
     v_local_exp: jax.Array   # (B, 2, n_kv, hd)           int8
     v_bulk_mant: jax.Array   # (B, S_bulk//2, n_kv, hd)   int8 (4b pairs,
                              #   packed along the token axis inside a group)
-    v_bulk_exp: jax.Array    # (B, S_bulk//G, n_kv, hd)   int8
+    v_bulk_exp: jax.Array    # (B, S_bulk//G, n_kv, hd)   int8 (slot j =
+                             #   group j+1: bulk-relative, kernel-indexable)
     # --- online-smoothing offsets for K (subtracted before quantization) ---
     k_offsets: jax.Array     # (B, n_kv, hd)              f32
     length: jax.Array        # ()                          int32
@@ -229,18 +237,35 @@ def predicated_write(buf: jax.Array, update: jax.Array, cond,
 # ---------------------------------------------------------------------------
 
 def prefill_cache(cache: AsymKVCache, k: jax.Array, v: jax.Array,
-                  k_offsets: jax.Array | None = None) -> AsymKVCache:
+                  k_offsets: jax.Array | None = None, *,
+                  use_pallas: bool = False,
+                  interpret: bool | None = None) -> AsymKVCache:
     """Vectorized construction of the packed cache from a prefill chunk.
 
     ``k``/``v``: (B, S, n_kv, hd) with S a multiple of GROUP, S <= max_seq.
     ``k_offsets``: optional (B, n_kv, hd) online-smoothing offsets; they are
     subtracted from *all* keys before quantization (softmax-invariant).
+
+    ``use_pallas=True`` builds every packed region through the grid-fused
+    FP->BFP converter kernel (``kernels.ops.convert_prefill_cache``): the
+    dense K/V tiles are quantized, demoted and nibble-packed in VMEM and
+    only packed bytes are written to HBM — replacing this function's
+    quantize + ``.at[].set`` XLA chains.  Bit-identical output.
     """
     B, S, H, D = k.shape
     if S % GROUP != 0:
         raise ValueError(f"prefill length {S} must be a multiple of {GROUP}")
     if k_offsets is None:
         k_offsets = jnp.zeros((B, H, D), jnp.float32)
+    if use_pallas and D % GROUP == 0:
+        from repro.kernels import ops as kernel_ops
+        regions = kernel_ops.convert_prefill_cache(
+            k.astype(jnp.float32), v.astype(jnp.float32),
+            k_offsets.astype(jnp.float32),
+            s_bulk=cache.k_bulk_mant.shape[1], interpret=interpret)
+        return cache._replace(
+            **regions, k_offsets=k_offsets.astype(jnp.float32),
+            length=jnp.asarray(S, jnp.int32))
     k = k - k_offsets[:, None].astype(k.dtype)
 
     s_bulk = cache.k_bulk_mant.shape[1]
@@ -289,9 +314,9 @@ def prefill_cache(cache: AsymKVCache, k: jax.Array, v: jax.Array,
     if n_bulk_g > 0:
         vb = v[:, GROUP:(1 + n_bulk_g) * GROUP]
         m, e = _q_v_group(vb, 4)
-        # pack along token axis (pairs inside a group)
+        # pack along token axis (pairs inside a group); exps bulk-relative
         vbm = vbm.at[:, : n_bulk_g * GROUP // 2].set(_pack4_tokendim(m))
-        vbe = vbe.at[:, 1:1 + n_bulk_g].set(e)
+        vbe = vbe.at[:, :n_bulk_g].set(e)
     del s_bulk
 
     # residual group: raw copy of the incomplete trailing group (none when
@@ -310,7 +335,7 @@ def prefill_cache(cache: AsymKVCache, k: jax.Array, v: jax.Array,
 # ---------------------------------------------------------------------------
 
 def append_token(cache: AsymKVCache, k_new: jax.Array,
-                 v_new: jax.Array) -> AsymKVCache:
+                 v_new: jax.Array, *, legacy: bool = False) -> AsymKVCache:
     """Append one (B, n_kv, hd) K/V token at position t = length.
 
     jit-safe: all branches via lax.cond-free masking.  Every region is
@@ -320,7 +345,13 @@ def append_token(cache: AsymKVCache, k_new: jax.Array,
     scan-carried) cache is mutated in place instead of copied per step.
     Demotes K token t-64 (8b->4b) and, when a V group completes, demotes
     V group g-2.
+
+    ``legacy=True`` dispatches to the pre-fused-loop select-based
+    formulation (the decode-throughput benchmark baseline): bit-identical
+    values, whole-buffer ``jnp.where`` data movement.
     """
+    if legacy:
+        return _append_token_select(cache, k_new, v_new)
     t = cache.length
     B, _, H, D = cache.k_init_mant.shape
     k_new = (k_new.astype(jnp.float32)
@@ -377,7 +408,7 @@ def append_token(cache: AsymKVCache, k_new: jax.Array,
                       cache.v_bulk_mant.shape[1] - GROUP // 2)
     vbm = predicated_write(cache.v_bulk_mant, _pack4_tokendim(dvm),
                            do_vdemote, vb_idx)
-    vbe_idx = jnp.clip(gd, 1, cache.v_bulk_exp.shape[1] - 1)
+    vbe_idx = jnp.clip(gd - 1, 0, cache.v_bulk_exp.shape[1] - 1)
     vbe = predicated_write(cache.v_bulk_exp, dve, do_vdemote, vbe_idx)
     do_vlocal = completes & (g >= 1)
     vlm = predicated_write(cache.v_local_mant, gm, do_vlocal, vslot * GROUP)
@@ -398,8 +429,12 @@ def append_token(cache: AsymKVCache, k_new: jax.Array,
 # Gather: dequantize to positionally-ordered (B, S_cap, n_kv, hd) + mask
 # ---------------------------------------------------------------------------
 
-def gather_kv(cache: AsymKVCache, dtype=jnp.float32):
+def gather_kv(cache: AsymKVCache, dtype=jnp.float32, *,
+              legacy: bool = False):
     """Dequantize the full cache into position order.
+
+    ``legacy=True`` dispatches to the scatter/`.at[].set` formulation (the
+    decode-throughput benchmark baseline) — bit-identical values.
 
     Returns (k, v, valid) where k/v: (B, max_seq, n_kv, hd) and
     valid: (max_seq,) bool (position < length).  The k_offsets are *not*
@@ -420,6 +455,8 @@ def gather_kv(cache: AsymKVCache, dtype=jnp.float32):
     bulk region holds (freshly-demoted garbage), exactly like the scatter
     formulation — masked by ``valid`` downstream.
     """
+    if legacy:
+        return _gather_kv_select(cache, dtype)
     L = cache.length
     B, _, H, D = cache.k_init_mant.shape
     S = cache.max_seq
@@ -453,7 +490,7 @@ def gather_kv(cache: AsymKVCache, dtype=jnp.float32):
     n_bulk_groups = cache.v_bulk_exp.shape[1]
     v_bulk = _dq_v_group(
         vb_unpacked[:, : (n_bulk_groups - 1) * GROUP],
-        cache.v_bulk_exp[:, 1:], 4, dtype)
+        cache.v_bulk_exp[:, : n_bulk_groups - 1], 4, dtype)
     v = jnp.concatenate(
         [v_init, v_bulk, jnp.zeros((B, GROUP, H, D), dtype)], axis=1)
     v_local = _dq_v_group(cache.v_local_mant, cache.v_local_exp, 8, dtype)
@@ -487,14 +524,16 @@ def gather_kv(cache: AsymKVCache, dtype=jnp.float32):
 
 # ---------------------------------------------------------------------------
 # Legacy (pre-fused-loop) formulations, kept as the decode-throughput
-# benchmark baseline (same values bit-for-bit, different data movement):
-#   * append_token_select — whole-buffer jnp.where selects around every
+# benchmark baseline (same values bit-for-bit, different data movement),
+# reached through ``append_token(..., legacy=True)`` /
+# ``gather_kv(..., legacy=True)``:
+#   * _append_token_select — whole-buffer jnp.where selects around every
 #     dynamic_update_slice (no in-place aliasing under donation),
-#   * gather_kv_select — position scatters / .at[].set overlay chains.
+#   * _gather_kv_select — position scatters / .at[].set overlay chains.
 # ---------------------------------------------------------------------------
 
-def append_token_select(cache: AsymKVCache, k_new: jax.Array,
-                        v_new: jax.Array) -> AsymKVCache:
+def _append_token_select(cache: AsymKVCache, k_new: jax.Array,
+                         v_new: jax.Array) -> AsymKVCache:
     """Legacy append: ``jnp.where(cond, dynamic_update_slice(...), x)`` on
     every region (the pattern the predicated-write rewrite replaced)."""
     t = cache.length
@@ -549,7 +588,7 @@ def append_token_select(cache: AsymKVCache, k_new: jax.Array,
     vbm = jnp.where(do_vdemote, dus(cache.v_bulk_mant,
                                     _pack4_tokendim(dvm), vb_idx, axis=1),
                     cache.v_bulk_mant)
-    vbe_idx = jnp.clip(gd, 1, cache.v_bulk_exp.shape[1] - 1)
+    vbe_idx = jnp.clip(gd - 1, 0, cache.v_bulk_exp.shape[1] - 1)
     vbe = jnp.where(do_vdemote, dus(cache.v_bulk_exp, dve, vbe_idx, axis=1),
                     cache.v_bulk_exp)
     do_vlocal = completes & (g >= 1)
@@ -567,7 +606,7 @@ def append_token_select(cache: AsymKVCache, k_new: jax.Array,
         length=t + 1)
 
 
-def gather_kv_select(cache: AsymKVCache, dtype=jnp.float32):
+def _gather_kv_select(cache: AsymKVCache, dtype=jnp.float32):
     """Legacy gather: scatter the ring/local/residual regions into
     position order through ``.at[].set`` overlay chains (each one
     materializes the O(B·S·hd) output again)."""
@@ -598,7 +637,7 @@ def gather_kv_select(cache: AsymKVCache, dtype=jnp.float32):
     n_bulk_groups = cache.v_bulk_exp.shape[1]
     vb = _dq_v_group(
         vb_unpacked[:, : (n_bulk_groups - 1) * GROUP],
-        cache.v_bulk_exp[:, 1:], 4, dtype)
+        cache.v_bulk_exp[:, : n_bulk_groups - 1], 4, dtype)
     v = v.at[:, GROUP:GROUP + vb.shape[1]].set(vb)
     cg = L // GROUP
     sg = jnp.arange(V_LOCAL_GROUPS)
@@ -639,5 +678,5 @@ def fp16_cache_bytes(batch: int, n_kv: int, head_dim: int,
 
 __all__ = ["AsymKVCache", "init_cache", "prefill_cache", "append_token",
            "gather_kv", "fake_quant_kv", "cache_bytes", "fp16_cache_bytes",
-           "predicated_write", "append_token_select", "gather_kv_select",
+           "predicated_write",
            "INIT_TOKENS", "LOCAL_TOKENS", "GROUP", "V_LOCAL_GROUPS"]

@@ -196,7 +196,10 @@ def cache_pspecs(caches_abstract, mesh, batch_size: int) -> Any:
     left-pads batches onto one position counter.  Packed 4-bit regions
     (``k_bulk_mant`` pairs along head_dim, ``v_bulk_mant`` pairs along
     the token axis) keep their full token extent per shard; only batch
-    and head axes are ever split, never token/group axes.
+    and head axes are ever split, never token/group axes.  The
+    bulk-relative ``v_bulk_exp`` layout (slot j = group j+1) is a pure
+    token-axis reordering, so its spec is the generic per-field rule —
+    the layout never crosses shards.
 
     Other state leaves (SSM, RG-LRU, cross-attn enc K/V) use the generic
     rule: batch axis read off the tree position ("scan" leaves carry two

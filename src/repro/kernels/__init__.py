@@ -1,3 +1,26 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the paper's compute hot-spots.
+
+Public surface (re-exported from :mod:`repro.kernels.ops`): the FP->BFP
+converter ops (flat, batched K/V, and the single-launch prefill-cache
+converter), the packed BFP-INT GEMM, and the grid-fused attention
+kernels (prefill, bulk-only decode baseline, single-launch
+asymmetric-cache decode).
+"""
+from repro.kernels.ops import (bfp_attention_decode_bulk,
+                               bfp_attention_decode_cache,
+                               bfp_attention_prefill, bfp_linear,
+                               bfp_matmul, bfp_quantize,
+                               bfp_quantize_kv_batched,
+                               bfp_quantize_kv_pair, choose_dataflow,
+                               convert_prefill_cache,
+                               quantize_v_token_grouped,
+                               quantize_v_token_grouped_batched,
+                               quantize_v_token_grouped_batched_xla)
+
+__all__ = ["bfp_quantize", "bfp_quantize_kv_batched",
+           "bfp_quantize_kv_pair", "bfp_matmul",
+           "bfp_linear", "bfp_attention_prefill",
+           "bfp_attention_decode_bulk", "bfp_attention_decode_cache",
+           "convert_prefill_cache", "quantize_v_token_grouped",
+           "quantize_v_token_grouped_batched",
+           "quantize_v_token_grouped_batched_xla", "choose_dataflow"]

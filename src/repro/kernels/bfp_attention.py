@@ -604,7 +604,351 @@ def bfp_attention_decode_batched(q, k_mant4, k_exp, v_mant4, v_exp,
     return (o.reshape(B, H, hd), m.reshape(B, H, 1), l.reshape(B, H, 1))
 
 
+# ---------------------------------------------------------------------------
+# Decode (single-launch: bulk + init + local window in one grid)
+# ---------------------------------------------------------------------------
+
+# canonical cache-layout / shared-exponent parameters — the decode
+# kernel must index exactly the regions the cache writes
+from repro.core.bfp import EXP_MAX, EXP_MIN  # noqa: E402
+from repro.core.kvcache import (INIT_TOKENS, LOCAL_TOKENS,  # noqa: E402
+                                V_LOCAL_GROUPS as V_LOCAL_GROUPS_K)
+
+
+def _dq_k8_batched(mant, exp):
+    """(B, T, H, hd) int8 + (B, T, H, hd/32) -> f32 — op-for-op the same
+    math as ``kvcache._dq_k(..., 8)`` (elementwise, so bitwise equal)."""
+    shp = mant.shape
+    g = mant.astype(jnp.float32).reshape(shp[:-1] + (shp[-1] // GROUP,
+                                                     GROUP))
+    step = jnp.exp2(exp.astype(jnp.float32) - 6.0)[..., None]
+    return (g * step).reshape(shp)
+
+
+def _dq_k4_batched(packed, exp, hd):
+    """(B, T, H, hd/2) int8 nibble pairs + (B, T, H, hd/32) -> f32,
+    mirroring ``bfp.unpack_int4`` + ``kvcache._dq_k(..., 4)``."""
+    u = packed.astype(jnp.uint8)
+    lo = (u & 0xF).astype(jnp.int32)
+    hi = ((u >> 4) & 0xF).astype(jnp.int32)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    m = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[:-1] + (hd,))
+    g = m.astype(jnp.float32).reshape(packed.shape[:-1] + (hd // GROUP,
+                                                           GROUP))
+    step = jnp.exp2(exp.astype(jnp.float32) - 2.0)[..., None]
+    return (g * step).reshape(packed.shape[:-1] + (hd,))
+
+
+def _decode_asym_kernel(pf, qb_ref, q_ref, kbm_ref, kbe_ref, vbm_ref,
+                        vbe_ref, kwm_ref, kwe_ref, kim_ref, kie_ref,
+                        klm_ref, kle_ref, vim_ref, vie_ref, vlm_ref,
+                        vle_ref, vr_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                        block_s, n_s, n_kv, n_b, rep, logit_cap):
+    t = pl.program_id(0)
+    b = t // n_s                   # batch row during the bulk sweep
+    j = t % n_s
+    valid_len = pf[1]              # bulk-relative valid slots
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # ---- bulk tiles: one grid step covers ALL kv heads of a batch row
+    # (Hkv× fewer steps than the per-(b,h) legacy grid).  The dequant
+    # and flash updates are vectorized over heads (elementwise / per-row
+    # reductions — bitwise equal to per-head), while the QK and PV
+    # contractions stay per-head dots of the legacy kernel's exact
+    # shapes, so each head's flash triple is bitwise the legacy one ----
+    start_abs = pf[3 + jnp.minimum(b, n_b - 1)]
+    start = jnp.maximum(start_abs - INIT_TOKENS, 0)
+    live = (t < n_b * n_s) & (j * block_s < valid_len) \
+        & (j * block_s + block_s > start)
+
+    @pl.when(live)
+    def _bulk():
+        q3 = qb_ref[0].astype(jnp.float32)             # (Hkv, rep, hd)
+        hd = q3.shape[-1]
+        km = kbm_ref[0].astype(jnp.uint8)              # (bs, Hkv, hd/2)
+        lo = (km & 0xF).astype(jnp.int32)
+        hi = ((km >> 4) & 0xF).astype(jnp.int32)
+        lo = jnp.where(lo >= 8, lo - 16, lo)
+        hi = jnp.where(hi >= 8, hi - 16, hi)
+        k_int = jnp.stack([lo, hi], axis=-1).reshape(block_s, n_kv, hd)
+        kstep = jnp.exp2(kbe_ref[0].astype(jnp.float32) - 2.0)
+        k = (k_int.astype(jnp.float32)
+             .reshape(block_s, n_kv, hd // GROUP, GROUP)
+             * kstep[..., None]).reshape(block_s, n_kv, hd)
+        vm = vbm_ref[0].astype(jnp.uint8)              # (bs/2, Hkv, hd)
+        vlo = (vm & 0xF).astype(jnp.int32)
+        vhi = ((vm >> 4) & 0xF).astype(jnp.int32)
+        vlo = jnp.where(vlo >= 8, vlo - 16, vlo)
+        vhi = jnp.where(vhi >= 8, vhi - 16, vhi)
+        v_int = jnp.stack([vlo, vhi], axis=1).reshape(block_s, n_kv, hd)
+        vstep = jnp.exp2(vbe_ref[0].astype(jnp.float32) - 2.0)
+        v = (v_int.astype(jnp.float32)
+             .reshape(block_s // GROUP, GROUP, n_kv, hd)
+             * vstep[:, None]).reshape(block_s, n_kv, hd)
+
+        # per-head flash updates on the legacy kernel's exact (rep, bs)
+        # shapes — shared-exponent dequant batches fine (elementwise ==
+        # bitwise), but the dot contractions and the exp/sum/accumulate
+        # chain must keep their per-head shapes and fusion structure to
+        # reproduce the legacy triples bit-for-bit.  The barrier pins
+        # each head's contraction as its own dot instruction (XLA CPU's
+        # dot-merger would otherwise batch them into one dot_general
+        # with a different f32 reduction order); values are untouched —
+        # it only fences fusion.
+        for h in range(n_kv):
+            s = jnp.dot(*jax.lax.optimization_barrier((q3[h], k[:, h].T)),
+                        preferred_element_type=jnp.float32) \
+                / jnp.sqrt(float(hd))                  # (rep, bs)
+            if logit_cap > 0:
+                s = logit_cap * jnp.tanh(s / logit_cap)
+            pos = j * block_s + jax.lax.broadcasted_iota(jnp.int32,
+                                                         s.shape, 1)
+            valid = (pos < valid_len) & (pos >= start)
+            s = jnp.where(valid, s, NEG_INF)
+
+            slab = pl.ds(b * n_kv * rep + h * rep, rep)
+            m_prev = m_ref[slab]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[slab] = l_ref[slab] * corr \
+                + jnp.sum(p, axis=-1, keepdims=True)
+            acc_ref[slab] = acc_ref[slab] * corr + jnp.dot(
+                *jax.lax.optimization_barrier((p, v[:, h])),
+                preferred_element_type=jnp.float32)
+            m_ref[slab] = m_new
+
+    # ---- final grid step: the 8-bit init block + recent window for
+    # *all* (batch, head) at once — one vectorized tile body instead of
+    # the per-step XLA epilogue, mirroring its batched einsum
+    # formulation op-for-op so the merged output is bit-exact ----
+    @pl.when(t == n_b * n_s)
+    def _epilogue():
+        L = pf[0]
+        B = n_b
+        band = pf[2]                   # bulk 32-slot block index (cg-3)
+        q5 = q_ref[...].astype(jnp.float32)            # (B, Hkv, rep, hd)
+        hd = q5.shape[-1]
+        cg = L // GROUP
+        r = L % GROUP
+        R0 = GROUP * jnp.maximum(cg - 2, 1)
+        W = LOCAL_TOKENS + GROUP                       # 96-slot window
+
+        # K: init block + window (local ring in position order via a
+        # 2-phase select; the <=32 freshly-demoted tokens from the 4-bit
+        # band block fetched at bulk slot cg-3)
+        k_init = _dq_k8_batched(kim_ref[...], kie_ref[...])
+        k_loc = _dq_k8_batched(klm_ref[...], kle_ref[...])
+        kl2 = jnp.concatenate([k_loc, k_loc], axis=1)  # (B, 128, Hkv, hd)
+        phase = (R0 - INIT_TOKENS) % LOCAL_TOKENS      # 0 or 32
+        k_from_local = jnp.where(phase == 0, kl2[:, :W],
+                                 kl2[:, GROUP:GROUP + W])
+        k_band = _dq_k4_batched(kwm_ref[:, pl.ds(band * GROUP, GROUP)],
+                                kwe_ref[:, pl.ds(band * GROUP, GROUP)], hd)
+        k_from_bulk = jnp.concatenate([k_band, k_from_local[:, GROUP:]],
+                                      axis=1)
+        t_win = R0 + jax.lax.broadcasted_iota(jnp.int32, (W, 1), 0)[:, 0]
+        use_local = t_win >= jnp.maximum(INIT_TOKENS, L - LOCAL_TOKENS)
+        k_win = jnp.where(use_local[None, :, None, None], k_from_local,
+                          k_from_bulk)
+        k_ep = jnp.concatenate([k_init, k_win], axis=1)    # (B,128,Hkv,hd)
+
+        # V: init group + groups {a0, a0+1, a0+2} from the 8-bit group
+        # ring / the residual group re-converted at its current size
+        vie = jnp.exp2(vie_ref[...].astype(jnp.float32) - 6.0)
+        v_init = vim_ref[...].astype(jnp.float32).reshape(
+            B, 1, GROUP, n_kv, hd) * vie[:, :, None]
+        v_init = v_init.reshape(B, GROUP, n_kv, hd)
+        vle = jnp.exp2(vle_ref[...].astype(jnp.float32) - 6.0)
+        v_loc = vlm_ref[...].astype(jnp.float32)
+        ring0 = v_loc[:, :GROUP] * vle[:, 0:1]
+        ring1 = v_loc[:, GROUP:] * vle[:, 1:2]
+        resid_raw = vr_ref[...].astype(jnp.float32)    # (B, 32, Hkv, hd)
+        tok32 = jax.lax.broadcasted_iota(jnp.int32, (GROUP, 1), 0)[:, 0]
+        resid = jnp.where((tok32 < r)[None, :, None, None], resid_raw, 0.0)
+        absmax = jnp.max(jnp.abs(resid), axis=1)       # (B, Hkv, hd)
+        safe = jnp.where(absmax > 0, absmax, 1.0)
+        e = jnp.floor(jnp.log2(safe))
+        e = jnp.where(absmax > 0, e, float(EXP_MIN))
+        e = jnp.clip(e, EXP_MIN, EXP_MAX)
+        step = jnp.exp2(e - 6.0)[:, None]
+        resid_q = jnp.clip(jnp.trunc(resid / step), -127.0, 127.0) * step
+        a0 = jnp.maximum(cg - 2, 1)
+        parts = []
+        for off in range(W // GROUP):
+            gg = a0 + off
+            from_ring = jnp.where(gg % V_LOCAL_GROUPS_K == 0, ring0, ring1)
+            parts.append(jnp.where(gg == cg, resid_q, from_ring))
+        v_win = jnp.concatenate(parts, axis=1)         # (B, 96, Hkv, hd)
+        v_ep = jnp.concatenate([v_init, v_win], axis=1)
+
+        pos_ep = jnp.concatenate([tok32, t_win])       # (128,)
+        starts = jnp.stack([pf[3 + i] for i in range(B)])
+        valid_ep = (pos_ep[None, :] < L) \
+            & (pos_ep[None, :] >= starts[:, None])     # (B, 128)
+
+        # scores/softmax/PV with the legacy epilogue's exact einsum
+        # shapes — batch dims (b, g) — so the contraction order matches
+        # the XLA formulation bitwise at every rep (incl. the rep=1
+        # GEMV, where a per-head dot would reduce in a different order)
+        qg = q5.reshape(B, 1, n_kv, rep, hd)
+        s_e = jnp.einsum("bsgrd,btgd->bgrst", qg, k_ep,
+                         preferred_element_type=jnp.float32) \
+            * (1.0 / jnp.sqrt(float(hd)))              # (B,Hkv,rep,1,128)
+        if logit_cap > 0:
+            s_e = logit_cap * jnp.tanh(s_e / logit_cap)
+        s_e = jnp.where(valid_ep[:, None, None, None], s_e, NEG_INF)
+        m_e = jnp.max(s_e, axis=-1)                    # (B,Hkv,rep,1)
+        p_e = jnp.where(valid_ep[:, None, None, None],
+                        jnp.exp(s_e - m_e[..., None]), 0.0)
+        l_e = jnp.sum(p_e, axis=-1)
+        o_e = jnp.einsum("bgrst,btgd->bgrsd", p_e, v_ep,
+                         preferred_element_type=jnp.float32)[:, :, :, 0]
+
+        # two-way merge — same expression as the legacy XLA epilogue
+        m_e, l_e = m_e[..., 0], l_e[..., 0]            # (B,Hkv,rep)
+        o_b = acc_ref[...].reshape(B, n_kv, rep, hd)
+        m_b = m_ref[...].reshape(B, n_kv, rep)
+        l_b = l_ref[...].reshape(B, n_kv, rep)
+        m = jnp.maximum(m_e, m_b)
+        a_e = jnp.exp(m_e - m)
+        a_b = jnp.exp(m_b - m)
+        l = l_e * a_e + l_b * a_b
+        o = o_e * a_e[..., None] + o_b * a_b[..., None]
+        o_ref[...] = jnp.where(l[..., None] > 0,
+                               o / jnp.maximum(l[..., None], 1e-30), 0.0)
+
+
+def bfp_attention_decode_asym_batched(q, k_bulk_mant, k_bulk_exp,
+                                      v_bulk_mant, v_bulk_exp,
+                                      k_init_mant, k_init_exp,
+                                      k_local_mant, k_local_exp,
+                                      v_init_mant, v_init_exp,
+                                      v_local_mant, v_local_exp, v_resid,
+                                      length, *, start=None,
+                                      logit_cap: float = 0.0,
+                                      block_s: int = BLOCK_S_DECODE,
+                                      interpret: bool = False):
+    """Single-launch batched GQA decode over the *whole* asymmetric cache.
+
+    One ``pallas_call`` over a flattened grid of B·(S_bulk/bs) + 1
+    steps: the bulk sweep walks the 4-bit nibble-packed region with one
+    step per batch row covering all kv heads (Hkv× fewer grid steps
+    than the per-(b,h) legacy grid; dequant and flash updates vectorized
+    over heads, QK/PV contractions kept as per-head dots of the legacy
+    shapes, each head's flash triple in its own scratch slab — bitwise
+    the legacy triple, same dead-tile skip rule),
+    and the *single* final step dequantizes the three small 8-bit
+    regions for every (batch, head) at once (init block, local K ring
+    rolled into position order via a 2-phase select, the ≤32 freshly
+    demoted K tokens from a scalar-prefetch-indexed bulk band block, the
+    V group ring and the residual group re-converted at its current
+    size) and merges the flash triples in-kernel — eliminating the two
+    extra launches and the XLA dynamic-slice/select epilogue per layer
+    per step.  ``v_bulk_exp`` is indexed directly (bulk-relative layout:
+    slot j = group j+1) — no per-step exponent shift exists on this
+    path.  The final step mirrors the legacy XLA epilogue's batched
+    einsum formulation op-for-op, which is what makes the merged output
+    bit-exact against the kernel+epilogue path at matched bulk tiles
+    (both jitted) at every GQA rep, including the rep=1 GEMV shape.
+
+    q: (B, H, hd); cache regions in their ``AsymKVCache`` layouts;
+    length: () int32 cache length; start: optional (B,) int32 left-pad
+    prefix (absolute positions).  Returns normalized (B, H, hd) f32.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    B, H, hd = q.shape
+    s_bulk, Hkv = k_bulk_mant.shape[1], k_bulk_mant.shape[2]
+    rep = H // Hkv
+    if H % Hkv:
+        raise ValueError(f"H={H} must be a multiple of Hkv={Hkv}")
+    bs = min(block_s, s_bulk)
+    if s_bulk % bs or bs % GROUP:
+        bs = _aligned_block(s_bulk, block_s)
+    n_s = s_bulk // bs
+    n_bh = B * Hkv
+    q4 = q.reshape(B, Hkv, rep, hd)
+    L = jnp.asarray(length, jnp.int32).reshape(())
+    cg = L // GROUP
+    vl_bulk = jnp.maximum(GROUP * (cg - 2) - INIT_TOKENS, 0)
+    band = jnp.clip(cg - 3, 0, s_bulk // GROUP - 1)
+    if start is None:
+        start = jnp.zeros((B,), jnp.int32)
+    prefetch = jnp.concatenate(
+        [L.reshape(1), vl_bulk.reshape(1), band.reshape(1),
+         jnp.asarray(start, jnp.int32).reshape(B)])
+    ng = hd // GROUP
+    kernel = functools.partial(_decode_asym_kernel, block_s=bs, n_s=n_s,
+                               n_kv=Hkv, n_b=B, rep=rep,
+                               logit_cap=logit_cap)
+
+    def fixed(T, d):
+        # whole-array refs, read once in the final (epilogue) step: a
+        # blocked spec would re-fetch every region every grid step (the
+        # interpreter re-slices per step; on TPU the revisit cache would
+        # hide it, but ANY also lets Mosaic keep these small buffers
+        # resident instead of streaming them through the block machinery)
+        del T, d
+        return pl.BlockSpec(memory_space=pltpu.ANY)
+
+    def bulk(T, d):
+        # (b, j) of the bulk sweep, all kv heads per block; the final
+        # (epilogue) step re-fetches the last row's first block, which
+        # it never reads
+        return pl.BlockSpec(
+            (1, T, Hkv, d),
+            lambda t, *_: (jnp.minimum(t // n_s, B - 1), t % n_s, 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * n_s + 1,),
+        in_specs=[
+            # q twice: a per-batch-row block for the bulk sweep, and the
+            # whole ref for the one vectorized epilogue step
+            pl.BlockSpec(
+                (1, Hkv, rep, hd),
+                lambda t, *_: (jnp.minimum(t // n_s, B - 1), 0, 0, 0)),
+            fixed(0, 0),
+            bulk(bs, hd // 2), bulk(bs, ng),
+            bulk(bs // 2, hd), bulk(bs // GROUP, hd),
+            # freshly-demoted K band: the bulk arrays again as whole
+            # refs; the epilogue slices one 32-slot block at the
+            # prefetched index (cg-3), once
+            fixed(0, 0), fixed(0, 0),
+            fixed(INIT_TOKENS, hd), fixed(INIT_TOKENS, ng),
+            fixed(LOCAL_TOKENS, hd), fixed(LOCAL_TOKENS, ng),
+            fixed(GROUP, hd), fixed(1, hd),
+            fixed(V_LOCAL_GROUPS_K * GROUP, hd), fixed(V_LOCAL_GROUPS_K, hd),
+            fixed(GROUP, hd),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, Hkv, rep, hd), lambda t, *_: (0, 0, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_bh * rep, hd), jnp.float32),
+            pltpu.VMEM((n_bh * rep, 1), jnp.float32),
+            pltpu.VMEM((n_bh * rep, 1), jnp.float32),
+        ],
+    )
+    (o,) = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, Hkv, rep, hd), jnp.float32)],
+        interpret=interpret,
+    )(prefetch, q4, q4, k_bulk_mant, k_bulk_exp, v_bulk_mant, v_bulk_exp,
+      k_bulk_mant, k_bulk_exp, k_init_mant, k_init_exp,
+      k_local_mant, k_local_exp, v_init_mant, v_init_exp,
+      v_local_mant, v_local_exp, v_resid)
+    return o.reshape(B, H, hd)
+
+
 __all__ = ["bfp_attention_prefill_kernel", "bfp_attention_prefill_batched",
            "bfp_attention_decode_kernel", "bfp_attention_decode_batched",
+           "bfp_attention_decode_asym_batched",
            "prefill_tile_counts", "BLOCK_Q_BATCHED", "BLOCK_S_BATCHED",
            "BLOCK_S_DECODE"]

@@ -22,12 +22,17 @@ import jax.numpy as jnp
 from repro.core import bfp
 from repro.kernels.bfp_attention import (BLOCK_Q_BATCHED, BLOCK_S_BATCHED,
                                          BLOCK_S_DECODE,
+                                         bfp_attention_decode_asym_batched,
                                          bfp_attention_decode_batched,
                                          bfp_attention_decode_kernel,
                                          bfp_attention_prefill_batched,
                                          bfp_attention_prefill_kernel)
 from repro.kernels.bfp_matmul import bfp_matmul_kernel, choose_dataflow
-from repro.kernels.bfp_quant import bfp_quantize_kernel
+from repro.kernels.bfp_quant import (bfp_quantize_kernel,
+                                     bfp_quantize_kv_batched_kernel,
+                                     bfp_quantize_kv_pair_kernel,
+                                     bfp_quantize_v_batched_kernel,
+                                     convert_prefill_cache_kernel)
 
 GROUP = 32
 
@@ -98,15 +103,64 @@ def quantize_v_token_grouped(v, mantissa_bits: int = 8):
     return m, e.T
 
 
-def quantize_v_token_grouped_batched(v, mantissa_bits: int = 8):
-    """(B, S, Hkv, hd) fp -> token-grouped packed V in the batched kernel
-    layout: (mant (B, S, Hkv, hd), exp (B, S/32, Hkv, hd))."""
+def quantize_v_token_grouped_batched_xla(v, mantissa_bits: int = 8):
+    """XLA reference for :func:`quantize_v_token_grouped_batched` (the
+    pre-converter-kernel formulation: quantize along axis 1, then two
+    ``moveaxis`` re-layout copies) — kept as the converter benchmark
+    baseline and bit-exactness oracle."""
     B, S, Hkv, hd = v.shape
     m, e = bfp.bfp_quantize(v, GROUP, mantissa_bits, axis=1)
     # token axis moved last: m (B, Hkv, hd, S/32, 32), e (B, Hkv, hd, S/32)
     m = jnp.moveaxis(m.reshape(B, Hkv, hd, S), -1, 1)
     e = jnp.moveaxis(e, -1, 1)
     return m, e
+
+
+@partial(jax.jit, static_argnames=("mantissa_bits", "pack", "interpret"))
+def quantize_v_token_grouped_batched(v, mantissa_bits: int = 8,
+                                     pack: bool = False,
+                                     interpret: Optional[bool] = None):
+    """(B, S, Hkv, hd) fp -> token-grouped packed V in the batched kernel
+    layout: (mant (B, S, Hkv, hd), exp (B, S/32, Hkv, hd)) — through the
+    grid-fused converter kernel (the token-group reduction and optional
+    int4 token-pair packing run on the VMEM tile; no moveaxis copies).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    return bfp_quantize_v_batched_kernel(
+        v, mantissa_bits=mantissa_bits, pack=pack, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("mantissa_bits", "pack", "interpret"))
+def bfp_quantize_kv_batched(x, mantissa_bits: int = 8, pack: bool = False,
+                            interpret: Optional[bool] = None):
+    """(B, S, Hkv, hd) fp -> per-token-grouped packed K in the batched
+    kernel layout: (mant (B, S, Hkv, hd) — nibble-packed (B, S, Hkv,
+    hd/2) when ``pack`` — , exp (B, S, Hkv, hd/32))."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return bfp_quantize_kv_batched_kernel(
+        x, mantissa_bits=mantissa_bits, pack=pack, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("mantissa_bits", "interpret"))
+def bfp_quantize_kv_pair(k, v, mantissa_bits: int = 8,
+                         interpret: Optional[bool] = None):
+    """One-launch FP->BFP conversion of fresh K and V for the prefill
+    attention kernel: per-token K groups + token-grouped V share one
+    (B·Hkv, S/bs) grid.  Returns (k_mant, k_exp, v_mant, v_exp)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return bfp_quantize_kv_pair_kernel(
+        k, v, mantissa_bits=mantissa_bits, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("s_bulk", "interpret"))
+def convert_prefill_cache(k, v, k_offsets, s_bulk: int,
+                          interpret: Optional[bool] = None):
+    """Single-launch FP->BFP conversion of a dense prefill chunk into all
+    packed asymmetric-cache regions (dict keyed by ``AsymKVCache`` field
+    names) — see ``bfp_quant.convert_prefill_cache_kernel``."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return convert_prefill_cache_kernel(k, v, k_offsets, s_bulk=s_bulk,
+                                        interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("mantissa_bits", "causal", "logit_cap",
@@ -212,7 +266,33 @@ def bfp_attention_decode_bulk(q, k_mant4, k_exp, v_mant4, v_exp, valid_len,
     return (o.reshape(B, H, hd), m.reshape(B, H, 1), l.reshape(B, H, 1))
 
 
+@partial(jax.jit, static_argnames=("logit_cap", "block_s", "interpret"))
+def bfp_attention_decode_cache(q, cache, start=None, logit_cap: float = 0.0,
+                               block_s: Optional[int] = None,
+                               interpret: Optional[bool] = None):
+    """Single-launch batched GQA decode of q (B, H, hd) against a packed
+    ``AsymKVCache``: one grid covers the 4-bit bulk region, the 8-bit
+    init block and the recent local window (K ring + freshly-demoted
+    band, V group ring + residual), with per-region dequant in the tile
+    body and the flash triples merged in-kernel.  Returns normalized
+    (B, H, hd) f32 — no XLA epilogue, no extra launches.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    return bfp_attention_decode_asym_batched(
+        q, cache.k_bulk_mant, cache.k_bulk_exp,
+        cache.v_bulk_mant, cache.v_bulk_exp,
+        cache.k_init_mant, cache.k_init_exp,
+        cache.k_local_mant, cache.k_local_exp,
+        cache.v_init_mant, cache.v_init_exp,
+        cache.v_local_mant, cache.v_local_exp, cache.v_resid,
+        cache.length, start=start, logit_cap=logit_cap,
+        block_s=block_s or BLOCK_S_DECODE, interpret=interpret)
+
+
 __all__ = ["bfp_quantize", "bfp_matmul", "bfp_linear",
            "bfp_attention_prefill", "bfp_attention_decode_bulk",
+           "bfp_attention_decode_cache", "bfp_quantize_kv_batched",
+           "bfp_quantize_kv_pair",
            "quantize_v_token_grouped", "quantize_v_token_grouped_batched",
+           "quantize_v_token_grouped_batched_xla", "convert_prefill_cache",
            "choose_dataflow"]

@@ -312,14 +312,41 @@ def attention_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             if quant is not None and quant.enabled and quant.quant_attention
             else 8)
     q = _quant_qk(q, quant)
-    km, ke = kernel_ops.bfp_quantize(k.astype(jnp.float32), bits,
-                                     interpret=interpret)
-    vm, ve = kernel_ops.quantize_v_token_grouped_batched(
-        v.astype(jnp.float32), bits)
+    # one-launch grid-fused FP->BFP converter: per-token K groups and
+    # token-grouped V share the (B·Hkv, S/bs) grid and are reduced and
+    # packed on the VMEM tile (no XLA moveaxis re-layout pass between
+    # the dense QKV and the kernel, one launch instead of two quantizes)
+    km, ke, vm, ve = kernel_ops.bfp_quantize_kv_pair(
+        k.astype(jnp.float32), v.astype(jnp.float32), bits,
+        interpret=interpret)
     return kernel_ops.bfp_attention_prefill(
         q.astype(jnp.float32), km, ke, vm, ve, mantissa_bits=bits,
         causal=causal, logit_cap=logit_cap, window=window,
         interpret=interpret)
+
+
+def _decode_packed_pallas_single(q: jax.Array, cache: kvcache.AsymKVCache,
+                                 *, logit_cap: float,
+                                 quant: Optional[QuantConfig],
+                                 extra_invalid_prefix: Optional[jax.Array],
+                                 interpret: Optional[bool]) -> jax.Array:
+    """Single-launch kernel decode: one ``pallas_call`` whose grid covers
+    all three asymmetric-cache regions — the 4-bit bulk tiles plus a
+    final step that dequantizes the 8-bit init block and the recent
+    window (local K ring, freshly-demoted K band, V group ring, residual
+    group) in-tile and merges the flash triples in-kernel.  Bit-exact
+    against :func:`_decode_packed_pallas` at matched bulk tiles, minus
+    its two extra launches and XLA dynamic-slice/select epilogue."""
+    from repro.kernels import ops as kernel_ops
+    B, _, H, hd = q.shape
+    q = _quant_qk(q, quant).astype(jnp.float32)
+    start = None
+    if extra_invalid_prefix is not None:
+        start = extra_invalid_prefix.astype(jnp.int32)
+    out = kernel_ops.bfp_attention_decode_cache(
+        q[:, 0], cache, start=start, logit_cap=logit_cap,
+        interpret=interpret)
+    return out.reshape(B, 1, H, hd)
 
 
 def _decode_packed_pallas(q: jax.Array, cache: kvcache.AsymKVCache, *,
@@ -327,9 +354,10 @@ def _decode_packed_pallas(q: jax.Array, cache: kvcache.AsymKVCache, *,
                           quant: Optional[QuantConfig],
                           extra_invalid_prefix: Optional[jax.Array],
                           interpret: Optional[bool]) -> jax.Array:
-    """Kernel-backed decode: the 4-bit bulk region goes through the
-    grid-fused Pallas kernel; the small 8-bit init/local/residual regions
-    are handled by an XLA epilogue and merged via the flash triple.
+    """Legacy two-launch kernel decode (the ``kernels_micro`` benchmark
+    baseline): the 4-bit bulk region goes through the grid-fused Pallas
+    kernel; the small 8-bit init/local/residual regions are handled by an
+    XLA epilogue and merged via the flash triple.
 
     Region split at length L (cg = L//32):
       * bulk (kernel): tokens [32, 32·(cg-2)) — the common range where
@@ -354,14 +382,11 @@ def _decode_packed_pallas(q: jax.Array, cache: kvcache.AsymKVCache, *,
     start = None
     if extra_invalid_prefix is not None:
         start = jnp.maximum(extra_invalid_prefix.astype(jnp.int32) - INIT, 0)
-    # v_bulk_exp stores group g at slot g; the kernel indexes exponents by
-    # bulk-relative group (g-1) — shift down and pad a dead tail slot
-    ve_bulk = jnp.concatenate(
-        [cache.v_bulk_exp[:, 1:],
-         jnp.zeros_like(cache.v_bulk_exp[:, :1])], axis=1)
+    # v_bulk_exp is bulk-relative (slot g-1 holds group g) — exactly the
+    # order the kernel indexes, so it is passed straight through
     o_b, m_b, l_b = kernel_ops.bfp_attention_decode_bulk(
         q[:, 0], cache.k_bulk_mant, cache.k_bulk_exp,
-        cache.v_bulk_mant, ve_bulk, vl_bulk, start=start,
+        cache.v_bulk_mant, cache.v_bulk_exp, vl_bulk, start=start,
         logit_cap=logit_cap, interpret=interpret)
 
     # ---- epilogue: init region + recent window ----
@@ -440,16 +465,22 @@ def attention_decode_packed(q: jax.Array, cache: kvcache.AsymKVCache, *,
                             dp_axes: tuple = ("data",),
                             use_pallas: bool = False,
                             legacy: bool = False,
+                            single_launch: bool = True,
                             interpret: Optional[bool] = None) -> jax.Array:
     """One-token decode: q (B,1,H,hd) against the packed asymmetric cache.
 
     ``extra_invalid_prefix``: optional (B,) count of left-pad positions to
     mask out (serving engine).  Returns (B,1,H,hd).
 
-    ``use_pallas=True`` routes the bandwidth-critical 4-bit bulk region
-    through the grid-fused Pallas decode kernel and merges the small
-    8-bit regions via an XLA flash epilogue (note: P stays fp32 on that
-    path, so ``quant.quant_attention`` P-quantization is not applied).
+    ``use_pallas=True`` routes the whole cache read through one
+    single-launch grid-fused Pallas kernel: the 4-bit bulk tiles and the
+    small 8-bit init/local/residual regions are dequantized per-region in
+    the tile body and the flash triples merge in-kernel — no XLA epilogue
+    and no extra launches.  ``single_launch=False`` restores the legacy
+    two-launch form (bulk kernel + XLA flash epilogue), kept as the
+    ``kernels_micro`` benchmark baseline.  P stays fp32 inside the
+    kernels on both forms (DESIGN.md §2), so ``quant.quant_attention``
+    P-quantization is not applied there.
 
     The default XLA path dequantizes the cache to bf16 (mantissas <= 8
     bits are exactly representable; the 2^e scales are exact) — halves
@@ -458,14 +489,17 @@ def attention_decode_packed(q: jax.Array, cache: kvcache.AsymKVCache, *,
     """
     hd = q.shape[-1]
     if use_pallas and not seq_shard:
-        return _decode_packed_pallas(
+        fn = (_decode_packed_pallas_single if single_launch
+              else _decode_packed_pallas)
+        return fn(
             q, cache, logit_cap=logit_cap, quant=quant,
             extra_invalid_prefix=extra_invalid_prefix, interpret=interpret)
     q = _quant_qk(q, quant)
     if legacy:
         # pre-fused-loop formulation (decode-throughput baseline): the
         # scatter-based gather straight into bf16
-        k, v, valid = kvcache.gather_kv_select(cache, dtype=jnp.bfloat16)
+        k, v, valid = kvcache.gather_kv(cache, dtype=jnp.bfloat16,
+                                        legacy=True)
     else:
         # gather in f32 and cast once: identical values (the dequants
         # compute in f32 either way; cast commutes with the pure data

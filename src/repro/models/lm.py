@@ -160,9 +160,10 @@ def _attn_block(h, p, kind: str, cfg: ModelConfig,
     elif ctx.mode == "prefill":
         # grid-fused Pallas path: engine-style causal prefill (arange
         # positions, no padding mask, un-sharded) on the global-attn kind
-        if (ctx.use_pallas and kind == "attn" and not ctx.bidir
-                and ctx.k_valid is None and not ctx.seq_shard
-                and S % 32 == 0 and cfg.head_dim % 32 == 0):
+        pallas_ok = (ctx.use_pallas and kind == "attn" and not ctx.bidir
+                     and ctx.k_valid is None and not ctx.seq_shard
+                     and S % 32 == 0 and cfg.head_dim % 32 == 0)
+        if pallas_ok:
             attn = attn_lib.attention_prefill_pallas(
                 q, k, v, causal=True, logit_cap=cfg.attn_logit_softcap,
                 quant=quant)
@@ -180,8 +181,12 @@ def _attn_block(h, p, kind: str, cfg: ModelConfig,
                     quant.smoothing.online_topk)
             c = kvcache.init_cache(B, cfg.n_kv_heads, cfg.head_dim,
                                    ctx.max_seq)
+            # same guard as the attention kernel: the packed cache is
+            # built by the single-launch FP->BFP converter kernel (only
+            # packed bytes hit HBM) instead of the XLA quantize chains
             new_cache = kvcache.prefill_cache(
-                c, k.astype(jnp.float32), v.astype(jnp.float32), off)
+                c, k.astype(jnp.float32), v.astype(jnp.float32), off,
+                use_pallas=pallas_ok)
         else:
             c = attn_lib.init_ring_cache(B, cfg.n_kv_heads, cfg.head_dim,
                                          min(cfg.window_size, ctx.max_seq))
@@ -189,9 +194,8 @@ def _attn_block(h, p, kind: str, cfg: ModelConfig,
                 c, k.astype(jnp.float32), v.astype(jnp.float32))
     elif ctx.mode == "decode":
         if kind == "attn":
-            append = (kvcache.append_token_select if ctx.legacy_cache
-                      else kvcache.append_token)
-            new_cache = append(cache, k[:, 0], v[:, 0])
+            new_cache = kvcache.append_token(cache, k[:, 0], v[:, 0],
+                                             legacy=ctx.legacy_cache)
             attn = attn_lib.attention_decode_packed(
                 q, new_cache, logit_cap=cfg.attn_logit_softcap, quant=quant,
                 extra_invalid_prefix=ctx.pad_prefix,

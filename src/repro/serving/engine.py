@@ -69,11 +69,14 @@ class EngineConfig:
     sampler: str = "greedy"
     temperature: float = 0.8
     seed: int = 0
-    # Route global-attention prefill and the 4-bit bulk decode region
-    # through the grid-fused Pallas kernels (one pallas_call over the
-    # (batch x kv-head) grid with causal tile skipping) instead of
-    # the XLA dequantize-and-attend paths.  Off by default: the XLA path
-    # keeps the fake-quant P numerics used by the accuracy benchmarks.
+    # Route the serving hot paths through the grid-fused Pallas kernels:
+    # prefill attention consumes K/V packed by the in-kernel FP->BFP
+    # converters, the packed cache is built by the single-launch
+    # converter (only packed bytes hit HBM), and each decode step reads
+    # all three asymmetric-cache regions through one single-launch
+    # kernel (bulk tiles + in-kernel init/local epilogue and flash
+    # merge).  Off by default: the XLA path keeps the fake-quant P
+    # numerics used by the accuracy benchmarks.
     use_pallas_kernels: bool = False
     # Run generation through the fused on-device loop (single dispatch
     # for the whole decode, donated in-place cache).  ``False`` restores

@@ -124,10 +124,10 @@ def test_v_residual_group_roundtrip():
 
 def test_legacy_cache_ops_bit_identical():
     """The legacy select/scatter formulations (the decode-throughput
-    benchmark baseline) and the predicated-write / overlay rewrites are
-    pure data-movement variants: bit-identical caches and gathers across
-    region boundaries (ring entry, demotion start, group commits,
-    partial residual, full cache)."""
+    benchmark baseline, behind ``legacy=True``) and the predicated-write
+    / overlay rewrites are pure data-movement variants: bit-identical
+    caches and gathers across region boundaries (ring entry, demotion
+    start, group commits, partial residual, full cache)."""
     rng = np.random.default_rng(3)
     B, H, D, S = 2, 2, 32, 256
     for prefill_len, extra in [(32, 0), (32, 65), (64, 33), (128, 95),
@@ -142,12 +142,12 @@ def test_legacy_cache_ops_bit_identical():
             kn = jnp.asarray(rng.normal(size=(B, H, D)).astype(np.float32))
             vn = jnp.asarray(rng.normal(size=(B, H, D)).astype(np.float32))
             c_new = append_token(c_new, kn, vn)
-            c_old = kvmod.append_token_select(c_old, kn, vn)
+            c_old = append_token(c_old, kn, vn, legacy=True)
         for a, b in zip(jax.tree.leaves(c_new), jax.tree.leaves(c_old)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         for dt in (jnp.float32, jnp.bfloat16):
             kn_, vn_, valn = gather_kv(c_new, dt)
-            ko_, vo_, valo = kvmod.gather_kv_select(c_old, dt)
+            ko_, vo_, valo = gather_kv(c_old, dt, legacy=True)
             np.testing.assert_array_equal(np.asarray(kn_), np.asarray(ko_))
             np.testing.assert_array_equal(np.asarray(vn_), np.asarray(vo_))
             np.testing.assert_array_equal(np.asarray(valn),
